@@ -1,0 +1,22 @@
+"""Paper Fig. 3: FlashAttention-2 kernel area, with and without ExpMul, for
+d = {16, 64, 256} x {FP32, BF16} — from the 28nm cost model
+(benchmarks/hw_model.py; constants documented there)."""
+from benchmarks.hw_model import savings_table
+
+
+def main():
+    print("# fig3_area (28nm cost model; paper reports 28.8% avg saving)")
+    for tier in ("datapath", "calibrated"):
+        rows = savings_table(tier)
+        print(f"-- tier: {tier}")
+        print(f"{'dtype':6s} {'d':>4s} {'base mm^2':>10s} {'expmul mm^2':>12s} {'saving':>8s}")
+        for r in rows:
+            print(f"{r['dtype']:6s} {r['d']:4d} {r['base_area_um2']/1e6:10.4f} "
+                  f"{r['expmul_area_um2']/1e6:12.4f} {r['area_saving_pct']:7.1f}%")
+        avg = sum(r["area_saving_pct"] for r in rows) / len(rows)
+        print(f"   average area saving [{tier}]: {avg:.1f}%  (paper: 28.8%)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

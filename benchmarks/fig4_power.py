@@ -1,0 +1,22 @@
+"""Paper Fig. 4: FlashAttention-2 kernel power (energy/step proxy at fixed
+500MHz-like throughput), with and without ExpMul — from the 28nm cost
+model."""
+from benchmarks.hw_model import savings_table
+
+
+def main():
+    print("# fig4_power (28nm energy model; paper reports 17.6% avg saving)")
+    for tier in ("datapath", "calibrated"):
+        rows = savings_table(tier)
+        print(f"-- tier: {tier}")
+        print(f"{'dtype':6s} {'d':>4s} {'base pJ/step':>13s} {'expmul pJ/step':>15s} {'saving':>8s}")
+        for r in rows:
+            print(f"{r['dtype']:6s} {r['d']:4d} {r['base_energy_pj']:13.1f} "
+                  f"{r['expmul_energy_pj']:15.1f} {r['power_saving_pct']:7.1f}%")
+        avg = sum(r["power_saving_pct"] for r in rows) / len(rows)
+        print(f"   average power saving [{tier}]: {avg:.1f}%  (paper: 17.6%)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Kernel wall-time microbenchmark (CPU software proxy — the TPU target's
+win is VPU op count; CPU exp-vs-bitops ratios differ, reported for
+completeness)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attention import decode_attention, flash_jnp
+
+
+def _time(f, *args, iters=10):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def main():
+    print("# kernel_microbench (CPU proxy), us/call")
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for (B, H, S, D) in [(1, 4, 512, 64), (1, 8, 1024, 128)]:
+        kq, kk, kv = jax.random.split(key, 3)
+        q = jax.random.normal(kq, (B, H, S, D))
+        k = jax.random.normal(kk, (B, H, S, D))
+        v = jax.random.normal(kv, (B, H, S, D))
+        for variant in ("exact", "expmul"):
+            f = jax.jit(lambda q, k, v, vt=variant: flash_jnp(
+                q, k, v, causal=True, variant=vt, remat=False))
+            us = _time(f, q, k, v)
+            rows.append((f"flash_fwd_{variant}_B{B}H{H}S{S}D{D}", us))
+    # decode path
+    B, H, Hkv, S, D = 8, 8, 2, 2048, 64
+    kq, kk, kv = jax.random.split(key, 3)
+    q1 = jax.random.normal(kq, (B, H, D))
+    kc = jax.random.normal(kk, (B, Hkv, S, D))
+    vc = jax.random.normal(kv, (B, Hkv, S, D))
+    lens = jnp.full((B,), S, jnp.int32)
+    for variant in ("exact", "expmul"):
+        f = jax.jit(lambda q, k, v, l, vt=variant: decode_attention(
+            q, k, v, l, variant=vt))
+        us = _time(f, q1, kc, vc, lens)
+        rows.append((f"decode_{variant}_B{B}S{S}", us))
+    for name, us in rows:
+        print(f"{name},{us:.1f},")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

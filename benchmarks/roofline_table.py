@@ -1,0 +1,42 @@
+"""Render the §Roofline table from dry-run JSON artifacts
+(experiments/dryrun/*.json, produced by repro.launch.dryrun_all)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_cells(pattern="*.json"):
+    cells = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_row(c):
+    r = c["roofline"]
+    peak = c["bytes_per_device"]["peak_estimate"] / 2**30
+    return (f"{c['arch']:22s} {c['shape']:12s} {c['mesh']:8s} "
+            f"{r['compute_s']:9.4f} {r['memory_s']:9.4f} {r['collective_s']:9.4f} "
+            f"{r['bottleneck']:10s} {r['useful_flops_ratio']:7.3f} {peak:7.2f}")
+
+
+def main():
+    cells = load_cells()
+    if not cells:
+        print("no dry-run artifacts yet; run: python -m repro.launch.dryrun_all")
+        return []
+    print(f"{'arch':22s} {'shape':12s} {'mesh':8s} "
+          f"{'compute_s':>9s} {'memory_s':>9s} {'coll_s':>9s} "
+          f"{'bottleneck':10s} {'6ND/HLO':>7s} {'GiB/dev':>7s}")
+    for c in cells:
+        print(fmt_row(c))
+    return cells
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Benchmark harness: one entry per paper table/figure + system benches.
+Prints ``name,us_per_call,derived`` CSV lines after each section."""
+from __future__ import annotations
+
+import time
+
+
+def _section(name, fn):
+    t0 = time.time()
+    print(f"\n{'='*70}\n{name}\n{'='*70}")
+    out = fn()
+    print(f"{name},{(time.time()-t0)*1e6:.0f},ok")
+    return out
+
+
+def main() -> None:
+    from benchmarks import fig3_area, fig4_power, hwcost, kernel_microbench, \
+        roofline_table, table1_fidelity
+
+    _section("table1_fidelity (paper Table I)", table1_fidelity.main)
+    _section("fig3_area (paper Fig. 3)", fig3_area.main)
+    _section("fig4_power (paper Fig. 4)", fig4_power.main)
+    _section("hwcost_op_census (paper §IV)", hwcost.main)
+    _section("kernel_microbench", kernel_microbench.main)
+    _section("roofline_table (EXPERIMENTS §Roofline)", roofline_table.main)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Fidelity study (the paper's Table I, adapted): train a small LM, then
+compare exact vs ExpMul attention at inference under FP32 and BF16 —
+perplexity delta and greedy-token agreement.
+
+  PYTHONPATH=src python examples/expmul_fidelity.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import SyntheticLMDataset
+from repro.models.api import forward, init_model, loss_fn
+from repro.optim.adamw import adamw
+
+CFG = ModelConfig(
+    name="fidelity-lm", num_layers=4, d_model=128, num_heads=4,
+    num_kv_heads=2, d_ff=512, vocab_size=2048, dtype="float32",
+    param_dtype="float32", attention_variant="exact", max_seq_len=512,
+)
+
+
+def train(steps=150, batch=8, seq=64):
+    data = SyntheticLMDataset(CFG.vocab_size, seq, seed=0)
+    params = init_model(jax.random.PRNGKey(0), CFG)
+    opt = adamw(1e-3)
+    st = opt.init(params)
+    step = jax.jit(lambda p, s, b: _step(p, s, b, opt))
+    for i in range(steps):
+        batch_np = {"tokens": jnp.asarray(data.batch(i, batch))}
+        params, st, loss = step(params, st, batch_np)
+    return params, data
+
+
+def _step(params, st, batch, opt):
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(p, batch, CFG))(params)
+    upd, st = opt.update(grads, st, params)
+    params = jax.tree.map(lambda p, u: p + u, params, upd)
+    return params, st, loss
+
+
+def evaluate(params, data, *, variant, dtype, n_batches=8, batch=8, seq=64):
+    cfg = CFG.replace(attention_variant=variant, dtype=dtype)
+    p = jax.tree.map(lambda l: l.astype(dtype) if l.dtype == jnp.float32 else l,
+                     params) if dtype != "float32" else params
+    fwd = jax.jit(lambda pp, b: forward(pp, b, cfg))
+    nll, argmaxes = [], []
+    for i in range(1000, 1000 + n_batches):
+        toks = jnp.asarray(data.batch(i, batch))
+        logits = fwd(p, {"tokens": toks}).astype(jnp.float32)
+        lp = jax.nn.log_softmax(logits[:, :-1], -1)
+        t = toks[:, 1:]
+        nll.append(-np.mean(np.asarray(
+            jnp.take_along_axis(lp, t[..., None], -1))))
+        argmaxes.append(np.asarray(jnp.argmax(logits, -1)))
+    return float(np.exp(np.mean(nll))), np.concatenate(argmaxes)
+
+
+def main():
+    print("training a small LM (exact attention)...")
+    params, data = train()
+    results = {}
+    for dtype in ("float32", "bfloat16"):
+        for variant in ("exact", "expmul"):
+            ppl, am = evaluate(params, data, variant=variant, dtype=dtype)
+            results[(dtype, variant)] = (ppl, am)
+    print(f"\n{'config':24s} {'perplexity':>10s} {'greedy agree vs FP32-exact':>28s}")
+    base = results[("float32", "exact")][1]
+    for (dtype, variant), (ppl, am) in results.items():
+        agree = float(np.mean(am == base))
+        label = {"float32": "FP32", "bfloat16": "BF16"}[dtype] + (
+            "-ExpMul" if variant == "expmul" else ""
+        )
+        print(f"{label:24s} {ppl:10.3f} {agree:27.2%}")
+    print("\n(the paper's claim: the ExpMul approximation does not degrade")
+    print(" task quality — Table I shows the same pattern on GLUE/Flan-T5)")
+
+
+if __name__ == "__main__":
+    main()

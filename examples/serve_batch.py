@@ -1,0 +1,51 @@
+"""Batched serving example: continuous batching over a slot pool, comparing
+the exact and ExpMul attention variants on identical requests.
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.api import init_model
+from repro.serve.engine import ServeEngine
+
+
+def run(variant: str, params, cfg0, prompts, max_new=24):
+    cfg = cfg0.replace(attention_variant=variant)
+    eng = ServeEngine(params, cfg, slots=4, max_len=128)
+    reqs = [eng.submit(p, max_new, rid=i) for i, p in enumerate(prompts)]
+    t0 = time.time()
+    eng.run()
+    dt = time.time() - t0
+    return reqs, eng.tokens_generated / dt, eng.ticks
+
+
+def main():
+    cfg = get_config("qwen2-0.5b", smoke=True, dtype="float32",
+                     param_dtype="float32")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(1, cfg.vocab_size, size=n))
+               for n in rng.integers(4, 16, size=10)]
+
+    print("10 requests, 4 slots (continuous batching), greedy decode")
+    for variant in ("exact", "expmul"):
+        reqs, tps, ticks = run(variant, params, cfg, prompts)
+        print(f"  {variant:7s}: {ticks} ticks, {tps:7.1f} tok/s")
+        if variant == "exact":
+            exact_outs = [tuple(r.out) for r in reqs]
+        else:
+            agree = np.mean([
+                np.mean([a == b for a, b in zip(x, y)])
+                for x, y in zip(exact_outs, [tuple(r.out) for r in reqs])
+            ])
+            print(f"  greedy token agreement exact vs expmul: {agree:.2%}")
+            print("  (quantized softmax weights occasionally flip near-ties;")
+            print("   the fidelity benchmark quantifies the task-level effect)")
+
+
+if __name__ == "__main__":
+    main()

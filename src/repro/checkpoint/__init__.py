@@ -1,0 +1,4 @@
+from repro.checkpoint.save import save_checkpoint, AsyncCheckpointer
+from repro.checkpoint.restore import restore_checkpoint, latest_step
+
+__all__ = ["save_checkpoint", "AsyncCheckpointer", "restore_checkpoint", "latest_step"]

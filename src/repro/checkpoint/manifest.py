@@ -1,0 +1,37 @@
+"""Checkpoint manifest: tree structure + per-leaf shape/dtype + per-shard
+global-slice index files. Mesh-independent: restore can target any mesh
+(elastic scaling) because shards are keyed by global offsets."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def leaf_key(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts) or "root"
+
+
+def shard_filename(key: str, start_indices) -> str:
+    off = "_".join(str(int(s)) for s in start_indices)
+    return f"{key.replace('/', '.')}__{off}.npy"
+
+
+def write_manifest(ckpt_dir, step, leaves):
+    """leaves: {key: {shape, dtype, shards: [{offset, shape, file}]}}"""
+    with open(os.path.join(ckpt_dir, "manifest.json"), "w") as f:
+        json.dump({"step": step, "leaves": leaves}, f, indent=1)
+
+
+def read_manifest(ckpt_dir):
+    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
+        return json.load(f)

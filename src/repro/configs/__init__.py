@@ -1,0 +1,15 @@
+from repro.configs.base import MLAConfig, MoEConfig, ModelConfig
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, SUBQUADRATIC_ARCHS, ShapeSpec, cells_for
+
+__all__ = [
+    "MLAConfig",
+    "MoEConfig",
+    "ModelConfig",
+    "ARCH_IDS",
+    "get_config",
+    "SHAPES",
+    "SUBQUADRATIC_ARCHS",
+    "ShapeSpec",
+    "cells_for",
+]

@@ -1,0 +1,30 @@
+"""arctic-480b [moe]: 35L d_model=7168 56H (GQA kv=8) vocab=32000, MoE 128
+experts top-2 (d_ff=4864) + dense residual FFN in parallel.
+[hf:Snowflake/snowflake-arctic-base; hf]"""
+from repro.configs.base import MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=0,
+    vocab_size=32000,
+    activation="swiglu",
+    moe=MoEConfig(num_experts=128, top_k=2, d_ff=4864,
+                  dense_residual=True, dense_d_ff=4864),
+    tie_embeddings=False,
+    opt_state_dtype="bfloat16",
+    max_seq_len=32768,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    vocab_size=256,
+    moe=MoEConfig(num_experts=4, top_k=2, d_ff=32,
+                  dense_residual=True, dense_d_ff=32),
+    max_seq_len=256,
+)

@@ -1,0 +1,177 @@
+"""Model configuration shared by all 10 assigned architectures.
+
+One dataclass covers the union of features (dense / GQA / MLA / MoE /
+RG-LRU hybrid / xLSTM / enc-dec / modality frontends); each
+``configs/<arch>.py`` instantiates it with the exact published numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    top_k: int = 0
+    d_ff: int = 0                  # per-expert hidden size
+    dense_residual: bool = False   # arctic: dense FFN in parallel with MoE
+    dense_d_ff: int = 0            # hidden of the dense residual path
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"  # router softmax kept exact (DESIGN §4)
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head latent attention (MiniCPM3 / DeepSeek-V2 family)."""
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_rope_dim: int = 32
+    qk_nope_dim: int = 64
+    v_head_dim: int = 64
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"          # dense|moe|hybrid|ssm|encdec|vlm|audio
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int | None = None    # default d_model // num_heads
+    d_ff: int = 1024
+    vocab_size: int = 1000
+    activation: str = "swiglu"     # swiglu | geglu | gelu
+    qkv_bias: bool = False
+    norm: str = "rmsnorm"
+    tie_embeddings: bool = True
+    scale_embeddings: bool = False  # gemma: embed * sqrt(d_model)
+    rope_base: float = 10000.0
+    max_seq_len: int = 8192
+
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+
+    # hybrid / ssm block patterns; unit repeats to fill num_layers
+    block_pattern: tuple[str, ...] = ("attn",)   # attn|rglru|mlstm|slstm
+    window: int | None = None                    # local attention window
+    lru_width: int | None = None                 # rg-lru state width
+
+    # enc-dec
+    encoder_layers: int = 0
+    decoder_layers: int = 0
+
+    # modality frontend stub (embeddings are model inputs per assignment)
+    frontend: str | None = None    # vision | audio
+    frontend_tokens: int = 0
+    frontend_dim: int = 0
+
+    # numerics / the paper's technique
+    attention_impl: str = "flash_jnp"      # ref | flash_jnp | pallas
+    attention_variant: str = "expmul"      # exact | expmul  (paper default on)
+    attention_block_k: int = 512
+    attention_q_chunks: int = 4            # causal block skipping (1 = off)
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    opt_state_dtype: str = "float32"       # bf16 for the 1T-class models
+    remat: bool = True
+    scan_layers: bool = True
+    logits_softcap: float | None = None
+
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    @property
+    def group_size(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    def pattern_for(self, num_layers: int | None = None) -> tuple[str, ...]:
+        n = num_layers if num_layers is not None else self.num_layers
+        unit = self.block_pattern
+        assert n % len(unit) == 0, (n, unit)
+        return tuple(unit) * (n // len(unit))
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- parameter counting (for 6ND roofline + memory budgeting) -----------
+    def param_count(self) -> int:
+        return _param_count(self)
+
+    def active_param_count(self) -> int:
+        return _param_count(self, active_only=True)
+
+
+def _attn_params(cfg: ModelConfig) -> int:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim()
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk_head = m.qk_nope_dim + m.qk_rope_dim
+        p = d * m.q_lora_rank + m.q_lora_rank * cfg.num_heads * qk_head
+        p += d * (m.kv_lora_rank + m.qk_rope_dim)
+        p += m.kv_lora_rank * cfg.num_heads * (m.qk_nope_dim + m.v_head_dim)
+        p += cfg.num_heads * m.v_head_dim * d
+        return p
+    q = d * cfg.num_heads * hd
+    kv = 2 * d * cfg.num_kv_heads * hd
+    o = cfg.num_heads * hd * d
+    b = (cfg.num_heads + 2 * cfg.num_kv_heads) * hd if cfg.qkv_bias else 0
+    return q + kv + o + b
+
+
+def _ffn_params(cfg: ModelConfig, d_ff: int) -> int:
+    mult = 3 if cfg.activation in ("swiglu", "geglu") else 2
+    return mult * cfg.d_model * d_ff
+
+
+def _block_params(cfg: ModelConfig, kind: str, active_only: bool) -> int:
+    d = cfg.d_model
+    if kind == "attn":
+        p = _attn_params(cfg)
+        if cfg.moe is not None:
+            k = cfg.moe.top_k if active_only else cfg.moe.num_experts
+            p += k * _ffn_params(cfg, cfg.moe.d_ff) + d * cfg.moe.num_experts
+            if cfg.moe.dense_residual:
+                p += _ffn_params(cfg, cfg.moe.dense_d_ff)
+        elif cfg.d_ff:
+            p += _ffn_params(cfg, cfg.d_ff)
+        return p + 2 * d
+    if kind == "rglru":
+        w = cfg.lru_width or d
+        # in/out proj (2 branches) + conv4 + gates a/x + lambda + mlp norm
+        p = 2 * d * w + 4 * w + 2 * w * w + 3 * w + w * d + 2 * d
+        if cfg.d_ff:
+            p += _ffn_params(cfg, cfg.d_ff)
+        return p
+    if kind == "mlstm":
+        nh = cfg.num_heads
+        inner = int(1.5 * d)
+        inner -= inner % nh
+        dh = inner // nh
+        return 2 * d * inner + 3 * nh * dh * dh + 2 * inner * nh \
+            + inner * d + 2 * d
+    if kind == "slstm":
+        nh = cfg.num_heads
+        dh = d // nh
+        f = int(4 / 3 * d)
+        return 8 * nh * dh * dh + 3 * d * f + 2 * d
+    raise ValueError(kind)
+
+
+def _param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    emb = cfg.vocab_size * cfg.d_model
+    out = 0 if cfg.tie_embeddings else cfg.vocab_size * cfg.d_model
+    total = emb + out + cfg.d_model  # final norm
+    if cfg.encoder_layers:
+        for kind in cfg.pattern_for(cfg.encoder_layers):
+            total += _block_params(cfg, kind, active_only)
+        for _ in range(cfg.decoder_layers):
+            total += _block_params(cfg, "attn", active_only) + _attn_params(cfg) + cfg.d_model
+        return total
+    for kind in cfg.pattern_for():
+        total += _block_params(cfg, kind, active_only)
+    if cfg.frontend:
+        total += cfg.frontend_dim * cfg.d_model
+    return total

@@ -1,0 +1,29 @@
+"""kimi-k2-1t-a32b [moe]: 61L d_model=7168 64H (GQA kv=8) vocab=163840,
+MoE 384 experts top-8, per-expert d_ff=2048 — trillion-param MoE
+(paper-table). [arXiv:2501.kimi2; unverified]
+
+Optimizer moments are kept in bf16 (opt_state_dtype) so the 512-chip
+training footprint fits v5e HBM — see EXPERIMENTS.md memory table.
+"""
+from repro.configs.base import MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=0,                      # all FFN capacity lives in the experts
+    vocab_size=163840,
+    activation="swiglu",
+    moe=MoEConfig(num_experts=384, top_k=8, d_ff=2048),
+    tie_embeddings=False,
+    opt_state_dtype="bfloat16",
+    max_seq_len=32768,
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, vocab_size=256,
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff=32), max_seq_len=256,
+)

@@ -1,0 +1,25 @@
+"""Architecture registry: --arch <id> -> (full config, smoke config)."""
+from __future__ import annotations
+
+import importlib
+
+_ARCH_MODULES = {
+    "llava-next-34b": "repro.configs.llava_next_34b",
+    "gemma-7b": "repro.configs.gemma_7b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "qwen1.5-0.5b": "repro.configs.qwen1_5_0_5b",
+    "qwen2-0.5b": "repro.configs.qwen2_0_5b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "xlstm-1.3b": "repro.configs.xlstm_1_3b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str, *, smoke: bool = False, **overrides):
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    cfg = mod.SMOKE if smoke else mod.CONFIG
+    return cfg.replace(**overrides) if overrides else cfg

@@ -1,0 +1,29 @@
+"""xlstm-1.3b [ssm]: 48L d_model=2048 4H d_ff=0 vocab=50304 — sLSTM + mLSTM
+blocks (7:1 ratio, xLSTM[7:1]); blocks carry their own 2x projections.
+[arXiv:2405.04517; unverified]
+
+No softmax attention exists in this family, so the paper's ExpMul operator
+is inapplicable (DESIGN.md §4) — the arch is implemented fully without it.
+"""
+from repro.configs.base import ModelConfig
+
+_UNIT = ("mlstm",) * 7 + ("slstm",)   # 8-block unit x 6 = 48 layers
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=_UNIT,
+    tie_embeddings=True,
+    max_seq_len=1_048_576,       # O(1)-state decode: long_500k applies
+)
+
+SMOKE = CONFIG.replace(
+    num_layers=8, d_model=64, num_heads=2, num_kv_heads=2, vocab_size=256,
+    max_seq_len=256,
+)

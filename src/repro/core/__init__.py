@@ -1,0 +1,5 @@
+# Core: the paper's contribution — ExpMul-fused FlashAttention-2 — exposed
+# as a composable attention module plus the decode path for serving.
+from repro.core.attention import attention, attention_ref, decode_attention, flash_jnp
+
+__all__ = ["attention", "attention_ref", "decode_attention", "flash_jnp"]

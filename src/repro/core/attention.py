@@ -1,0 +1,322 @@
+"""Core attention API — the paper's technique as a composable JAX module.
+
+One entry point, ``attention``, dispatches across implementations:
+
+  impl="ref"        full-softmax reference (small shapes, ground truth)
+  impl="flash_jnp"  scan-blocked FlashAttention-2 in pure jnp/lax. This is
+                    the XLA path used for 512-device dry-runs and training:
+                    O(S·block) memory, autodiff-able, shard_map/pjit friendly.
+  impl="pallas"     the Pallas TPU kernel (exact or ExpMul variant), wrapped
+                    in a custom_vjp whose backward recomputes via flash_jnp
+                    (FlashAttention-style recomputation; the paper's ASIC is
+                    forward/inference-only, see DESIGN.md §2).
+
+``variant`` selects the arithmetic: "exact" (baseline hardware: separate exp
+and FP multiplies) or "expmul" (the paper's fused operator). For training
+through the quantizer set ``use_ste=True`` (straight-through gradients).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash.ops import flash_attention_fwd
+from repro.kernels.decode.ops import decode_attention_pallas
+from repro.numerics.log2exp import (
+    apply_pow2_scale,
+    log2exp_lhat,
+    pow2_neg,
+    qexp_ste,
+)
+
+MASK_VALUE = -1e30
+
+
+def _qexp(x, use_ste):
+    """Quantized e^x as an exact power of two (paper's Log2Exp)."""
+    if use_ste:
+        return qexp_ste(x)
+    return pow2_neg(log2exp_lhat(x), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Reference (full softmax)
+# ---------------------------------------------------------------------------
+def attention_ref(q, k, v, *, causal=True, scale=None, window=None,
+                  variant="exact", use_ste=False):
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = H // Hkv
+    scale = float(1.0 / np.sqrt(D)) if scale is None else scale
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, Sq, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k.astype(jnp.float32)) * scale
+    rows = jnp.arange(Sq)[:, None]
+    cols = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= rows >= cols
+    if window is not None:
+        mask &= (rows - cols) < window
+    s = jnp.where(mask, s, MASK_VALUE)
+    if variant == "expmul":
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = _qexp(s - m, use_ste)
+        p = jnp.where(mask, p, 0.0)
+        p = p / jnp.sum(p, axis=-1, keepdims=True)
+    else:
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(mask, p, 0.0)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Scan-blocked FlashAttention-2 (XLA path)
+# ---------------------------------------------------------------------------
+def flash_jnp(
+    q, k, v, *,
+    causal=True,
+    scale=None,
+    window=None,
+    variant="exact",
+    use_ste=False,
+    block_k=512,
+    remat=True,
+    causal_q_chunks=4,
+):
+    """FlashAttention-2 as a lax.scan over KV blocks.
+
+    Memory per step is O(B·H·Sq_chunk·block_k) for the score tile; with
+    ``remat=True`` the scan body is rematerialized in the backward pass, so
+    residuals do not accumulate across steps.
+
+    ``causal_q_chunks``: causal block skipping. The query axis is split into
+    C chunks (a static python loop), and chunk i only scans KV blocks up to
+    its own diagonal — cutting causal compute from S^2 to ~S^2·(C+1)/(2C)
+    (C=4 -> 62.5%). §Perf iteration 1.
+    """
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    Dv = v.shape[-1]  # MLA: value head dim can differ from qk dim
+    group = H // Hkv
+    scale = float(1.0 / np.sqrt(D)) if scale is None else scale
+    bk = min(block_k, Sk)
+    if Sk % bk:  # choose the largest divisor <= block_k
+        bk = next(b for b in range(bk, 0, -1) if Sk % b == 0)
+    nk = Sk // bk
+
+    from repro.sharding.constraints import constrain, model_axis_size
+
+    # causal q-chunking applies when q and k cover the same positions
+    n_chunks = 1
+    if causal and window is None and causal_q_chunks > 1 and Sq == Sk:
+        for c in range(min(causal_q_chunks, nk), 0, -1):
+            if Sq % c == 0 and (Sq // c) % bk == 0:
+                n_chunks = c
+                break
+    Sq_c = Sq // n_chunks
+
+    # TP dim for attention activations: kv-heads if they divide the model
+    # axis, else the head group, else the (chunked) query sequence.
+    msize = model_axis_size()
+    tp = [None, None, None]  # (Hkv, group, Sq_c)
+    for i, dim in enumerate((Hkv, group, Sq_c)):
+        if msize and dim % msize == 0:
+            tp[i] = "model"
+            break
+    dims5 = ("batch", tp[0], tp[1], tp[2], None)
+
+    kb_full = jnp.moveaxis(k.reshape(B, Hkv, nk, bk, D), 2, 0)
+    vb_full = jnp.moveaxis(v.reshape(B, Hkv, nk, bk, Dv), 2, 0)
+
+    def run_chunk(q_chunk, row0, nk_c):
+        # q/k stay in the input dtype; the score einsum accumulates in f32
+        # (preferred_element_type) — no materialized f32 copies of q or k
+        # (§Perf llava iteration: the f32 casts were ~1/3 of s-tile traffic)
+        qf = q_chunk.reshape(B, Hkv, group, Sq_c, D)
+        qf = constrain(qf, *dims5)
+        rows = row0 + jnp.arange(Sq_c)[:, None]
+
+        def body(masked, carry, kt, vt, ci):
+            # keep the online-softmax state sharded: replicated carry inits
+            # otherwise win GSPMD's while-loop fixpoint and de-shard batch
+            m, l, acc = carry
+            m = constrain(m, *dims5)
+            l = constrain(l, *dims5)
+            acc = constrain(acc, *dims5)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kt,
+                           preferred_element_type=jnp.float32) * scale
+            if masked:
+                cols = ci * bk + jnp.arange(bk)[None, :]
+                mask = jnp.ones((Sq_c, bk), bool)
+                if causal:
+                    mask &= rows >= cols
+                if window is not None:
+                    mask &= (rows - cols) < window
+                s = jnp.where(mask, s, MASK_VALUE)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            if variant == "expmul":
+                alpha = _qexp(m - m_new, use_ste)
+                p = _qexp(s - m_new, use_ste)
+            else:
+                alpha = jnp.exp(m - m_new)
+                p = jnp.exp(s - m_new)
+            if masked:
+                p = jnp.where(mask, p, 0.0)
+            l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(v.dtype), vt,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        def make_body(masked):
+            fn = lambda carry, xs: body(masked, carry, *xs)
+            return jax.checkpoint(fn) if remat else fn
+
+        init = (
+            jnp.full((B, Hkv, group, Sq_c, 1), MASK_VALUE, jnp.float32),
+            jnp.zeros((B, Hkv, group, Sq_c, 1), jnp.float32),
+            jnp.zeros((B, Hkv, group, Sq_c, Dv), jnp.float32),
+        )
+        # interior blocks (entirely below the diagonal band) skip the mask
+        # build + two select materializations per tile (§Perf llava iter.)
+        if causal and window is None:
+            n_interior = max(0, row0 // bk)
+        elif not causal and window is None:
+            n_interior = nk_c          # no masking at all (cross-attention)
+        else:
+            n_interior = 0
+        n_interior = min(n_interior, nk_c)
+        carry = init
+        if n_interior:
+            carry, _ = jax.lax.scan(
+                make_body(False), carry,
+                (kb_full[:n_interior], vb_full[:n_interior],
+                 jnp.arange(n_interior)),
+            )
+        if nk_c > n_interior:
+            carry, _ = jax.lax.scan(
+                make_body(True), carry,
+                (kb_full[n_interior:nk_c], vb_full[n_interior:nk_c],
+                 jnp.arange(n_interior, nk_c)),
+            )
+        m, l, acc = carry
+        l = jnp.where(l == 0.0, 1.0, l)
+        return (acc / l).reshape(B, H, Sq_c, Dv)
+
+    if n_chunks == 1:
+        return run_chunk(q, 0, nk).astype(q.dtype)
+    outs = []
+    for ci in range(n_chunks):
+        q_chunk = q[:, :, ci * Sq_c:(ci + 1) * Sq_c, :]
+        nk_c = ((ci + 1) * Sq_c) // bk  # only blocks at/below the diagonal
+        outs.append(run_chunk(q_chunk, ci * Sq_c, nk_c))
+    return jnp.concatenate(outs, axis=2).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pallas path with recompute backward
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _pallas_attn_vjp(causal, scale, window, variant, block_q, block_k):
+    @jax.custom_vjp
+    def f(q, k, v):
+        return flash_attention_fwd(
+            q, k, v, causal=causal, scale=scale, window=window,
+            variant=variant, block_q=block_q, block_k=block_k,
+        )
+
+    def fwd(q, k, v):
+        return f(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        # FlashAttention-style recomputation; expmul uses STE gradients.
+        def ref_fn(q, k, v):
+            return flash_jnp(
+                q, k, v, causal=causal, scale=scale, window=window,
+                variant=variant, use_ste=(variant == "expmul"),
+                block_k=block_k,
+            )
+        _, pullback = jax.vjp(ref_fn, q, k, v)
+        return pullback(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+def attention(
+    q, k, v, *,
+    causal=True,
+    scale=None,
+    window=None,
+    impl="flash_jnp",
+    variant="exact",
+    use_ste=False,
+    block_q=128,
+    block_k=512,
+    remat=True,
+    q_chunks=4,
+):
+    """Multi-head attention with the paper's ExpMul technique as a variant.
+
+    q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D) with H % Hkv == 0.
+    """
+    if scale is None:
+        scale = float(1.0 / np.sqrt(q.shape[-1]))
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal, scale=scale, window=window,
+                             variant=variant, use_ste=use_ste)
+    if impl == "flash_jnp":
+        return flash_jnp(q, k, v, causal=causal, scale=scale, window=window,
+                         variant=variant, use_ste=use_ste, block_k=block_k,
+                         remat=remat, causal_q_chunks=q_chunks)
+    if impl == "pallas":
+        fn = _pallas_attn_vjp(causal, scale, window, variant,
+                              min(block_q, q.shape[2]), min(block_k, k.shape[2]))
+        return fn(q, k, v)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def decode_attention(
+    q, k_cache, v_cache, lengths, *,
+    scale=None,
+    impl="xla",
+    variant="exact",
+    block_k=256,
+):
+    """Single-token decode attention against a KV cache.
+
+    q: (B, H, D); caches: (B, Hkv, S, D); lengths: (B,) valid entries.
+    """
+    B, H, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    group = H // Hkv
+    scale = float(1.0 / np.sqrt(D)) if scale is None else scale
+    if impl == "pallas":
+        return decode_attention_pallas(
+            q, k_cache, v_cache, lengths, scale=scale, variant=variant,
+            block_k=block_k,
+        )
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, D)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qf, k_cache.astype(jnp.float32)) * scale
+    mask = (jnp.arange(S)[None, :] < lengths[:, None])[:, None, None, :]
+    s = jnp.where(mask, s, MASK_VALUE)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    if variant == "expmul":
+        p = pow2_neg(log2exp_lhat(s - m), jnp.float32)
+    else:
+        p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p / jnp.where(l == 0, 1, l),
+                   v_cache.astype(jnp.float32))
+    Dv = v_cache.shape[-1]  # MLA: value head dim can differ from qk dim
+    return o.reshape(B, H, Dv).astype(q.dtype)

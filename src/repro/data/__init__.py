@@ -1,0 +1,12 @@
+from repro.data.synthetic import SyntheticLMDataset
+from repro.data.dataset import MemmapTokenDataset, write_token_file
+from repro.data.packing import pack_documents
+from repro.data.sharded_loader import ShardedLoader
+
+__all__ = [
+    "SyntheticLMDataset",
+    "MemmapTokenDataset",
+    "write_token_file",
+    "pack_documents",
+    "ShardedLoader",
+]

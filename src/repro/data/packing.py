@@ -1,0 +1,26 @@
+"""Document packing: concatenate variable-length documents into fixed
+seq_len rows with an EOS separator and a loss mask that zeroes the token
+crossing each document boundary."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def pack_documents(docs, seq_len: int, *, eos_id: int = 0):
+    """docs: iterable of 1-D int arrays -> (tokens (N, S), loss_mask (N, S))."""
+    stream, boundaries = [], []
+    pos = 0
+    for d in docs:
+        stream.extend(int(t) for t in d)
+        stream.append(eos_id)
+        pos += len(d) + 1
+        boundaries.append(pos - 1)
+    n = len(stream) // seq_len
+    toks = np.asarray(stream[: n * seq_len], np.int32).reshape(n, seq_len)
+    mask = np.ones_like(toks, np.float32)
+    bset = set(boundaries)
+    for r in range(n):
+        for c in range(seq_len):
+            if r * seq_len + c in bset:
+                mask[r, c] = 0.0
+    return toks, mask

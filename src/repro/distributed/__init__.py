@@ -1,0 +1,11 @@
+from repro.distributed.compression import error_feedback_int8, int8_compress
+from repro.distributed.fault import StragglerWatchdog, TrainSupervisor
+from repro.distributed.pipeline import pipeline_forward
+
+__all__ = [
+    "error_feedback_int8",
+    "int8_compress",
+    "StragglerWatchdog",
+    "TrainSupervisor",
+    "pipeline_forward",
+]

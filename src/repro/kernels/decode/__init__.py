@@ -1,0 +1,4 @@
+from repro.kernels.decode.ops import decode_attention_pallas
+from repro.kernels.decode.ref import decode_attention_ref
+
+__all__ = ["decode_attention_pallas", "decode_attention_ref"]

@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: flash-decode (one query token against a long KV cache).
+
+Grid = (B * Hkv, kv_blocks). Each program owns the ``group`` query heads that
+share one KV head (GQA), so the row axis of every tile is the head-group —
+MQA (kv=1) degenerates to all H heads in one tile, which is exactly the
+layout that keeps the MXU busy for single-token decode. Per-sequence cache
+lengths arrive as a (B, 128) int32 operand read inside the kernel.
+
+The ExpMul variant applies the paper's operator to the decode path, where the
+softmax/rescale work is the dominant VPU cost (there is no large matmul to
+hide it behind) — the most favourable case for the technique on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+from repro.numerics.log2exp import apply_pow2_scale, log2exp_lhat, pow2_neg
+
+MASK_VALUE = -1e30
+_LANES = 128
+
+
+def _decode_kernel(
+    len_ref,   # (1, 128) int32; [0, 0] is the cache length for this batch elt
+    q_ref,     # (1, group, D)
+    k_ref,     # (1, bk, D)
+    v_ref,     # (1, bk, D)
+    o_ref,     # (1, group, D)
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    scale,
+    variant,
+    block_k,
+    nk,
+):
+    ki = pl.program_id(1)
+    length = len_ref[0, 0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, MASK_VALUE)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    c0 = ki * block_k
+
+    @pl.when(c0 < length)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)        # (group, d)
+        k = k_ref[0].astype(jnp.float32)        # (bk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                # (group, bk)
+        cols = c0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = cols < length
+        s = jnp.where(mask, s, MASK_VALUE)
+        m_prev = m_scr[...][:, :1]
+        l_prev = l_scr[...][:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        if variant == "exact":
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+            l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+            acc = acc_scr[...] * alpha + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+            )
+        else:
+            lr = log2exp_lhat(m_prev - m_new)
+            p = jnp.where(mask, pow2_neg(log2exp_lhat(s - m_new), jnp.float32), 0.0)
+            l_new = apply_pow2_scale(l_prev, lr) + jnp.sum(p, axis=1, keepdims=True)
+            acc = apply_pow2_scale(
+                acc_scr[...], jnp.broadcast_to(lr, acc_scr.shape)
+            ) + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+            )
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+        acc_scr[...] = acc
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        l = l_scr[...][:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "variant", "block_k", "num_q_heads", "num_kv_heads", "interpret"),
+)
+def decode_fwd_pallas(
+    q3,        # (B*Hkv, group, D)
+    k3,        # (B*Hkv, Sk_padded, D)
+    v3,
+    len2,      # (B, 128) int32
+    *,
+    scale,
+    variant,
+    block_k,
+    num_q_heads,
+    num_kv_heads,
+    interpret,
+):
+    BHkv, group, D = q3.shape
+    Sk = k3.shape[1]
+    nk = Sk // block_k
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, variant=variant, block_k=block_k, nk=nk
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BHkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, _LANES), lambda bh, ki: (bh // num_kv_heads, 0)),
+            pl.BlockSpec((1, group, D), lambda bh, ki: (bh, 0, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda bh, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, D), lambda bh, ki: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BHkv, group, D), q3.dtype),
+        scratch_shapes=[
+            _VMEM((group, _LANES), jnp.float32),
+            _VMEM((group, _LANES), jnp.float32),
+            _VMEM((group, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(len2, q3, k3, v3)

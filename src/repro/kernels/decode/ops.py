@@ -1,0 +1,44 @@
+"""Public wrapper for the flash-decode Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode.decode import _LANES, decode_fwd_pallas
+
+
+def decode_attention_pallas(
+    q: jax.Array,        # (B, H, D)
+    k_cache: jax.Array,  # (B, Hkv, S, D)
+    v_cache: jax.Array,
+    lengths: jax.Array,  # (B,) int32
+    *,
+    scale: float | None = None,
+    variant: str = "exact",
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    B, H, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    group = H // Hkv
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    scale = float(1.0 / np.sqrt(D)) if scale is None else float(scale)
+    bk = min(block_k, S)
+    pk = (-S) % bk
+    # (B, H, D) -> (B*Hkv, group, D); heads h in [kvh*group, (kvh+1)*group)
+    q3 = q.reshape(B, Hkv, group, D).reshape(B * Hkv, group, D)
+    k3 = jnp.pad(k_cache, ((0, 0), (0, 0), (0, pk), (0, 0))).reshape(B * Hkv, S + pk, D)
+    v3 = jnp.pad(v_cache, ((0, 0), (0, 0), (0, pk), (0, 0))).reshape(B * Hkv, S + pk, D)
+    len2 = jnp.broadcast_to(lengths.astype(jnp.int32)[:, None], (B, _LANES))
+    o3 = decode_fwd_pallas(
+        q3, k3, v3, len2,
+        scale=scale,
+        variant=variant,
+        block_k=bk,
+        num_q_heads=H,
+        num_kv_heads=Hkv,
+        interpret=interpret,
+    )
+    return o3.reshape(B, Hkv, group, D).reshape(B, H, D)

@@ -1,0 +1,48 @@
+"""Oracle for the decode (single new token vs KV cache) attention kernel.
+
+Reuses the blocked FlashAttention-2 oracle: for one batch element and one KV
+head, the ``group`` query heads form the row axis and the cache length masks
+the key axis. ``variant`` selects exact or ExpMul arithmetic.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash.ref import flash2_blocked_ref
+
+
+def decode_attention_ref(
+    q,         # (B, H, D) one new token per sequence
+    k_cache,   # (B, Hkv, S, D)
+    v_cache,
+    lengths,   # (B,) int32 valid cache lengths
+    *,
+    scale=None,
+    variant="exact",
+    block_k=128,
+):
+    B, H, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    group = H // Hkv
+    scale = float(1.0 / np.sqrt(D)) if scale is None else scale
+    lengths = np.asarray(lengths)
+    out = []
+    for b in range(B):
+        heads = []
+        for kvh in range(Hkv):
+            qg = q[b, kvh * group:(kvh + 1) * group]     # (group, D)
+            o = flash2_blocked_ref(
+                qg,
+                k_cache[b, kvh],
+                v_cache[b, kvh],
+                causal=False,
+                scale=scale,
+                variant=variant,
+                block_q=group,
+                block_k=block_k,
+                kv_len=int(lengths[b]),
+            )
+            heads.append(o)
+        out.append(jnp.concatenate(heads, axis=0))
+    return jnp.stack(out)                                # (B, H, D)

@@ -1,0 +1,4 @@
+from repro.kernels.expmul.ops import expmul_pallas, expmul_rows
+from repro.kernels.expmul.ref import expmul_ref, expmul_exact_ref
+
+__all__ = ["expmul_pallas", "expmul_rows", "expmul_ref", "expmul_exact_ref"]

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel for the ExpMul operator.
+
+Grid tiles rows x feature blocks into VMEM; each program applies the paper's
+Alg. 3 to one (block_rows, block_d) tile: integer shift-add Log2Exp on the
+per-row scalars, then an exponent-field subtraction on the V tile. All
+arithmetic inside the kernel is integer/bit ops on the VPU — no transcendental
+and no FP multiply, which is the paper's point.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.numerics.log2exp import apply_pow2_scale, log2exp_lhat
+
+
+def _expmul_kernel(x_ref, v_ref, o_ref):
+    x = x_ref[...]                      # (br, 1) f32 scalars (one per row)
+    v = v_ref[...]                      # (br, bd)
+    lhat = log2exp_lhat(x)              # int32 (br, 1), shift-add only
+    lhat = jnp.broadcast_to(lhat, v.shape)
+    o_ref[...] = apply_pow2_scale(v, lhat)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_d", "interpret"))
+def expmul_pallas(
+    x: jax.Array,
+    v: jax.Array,
+    *,
+    block_rows: int = 256,
+    block_d: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """ExpMul(x, V)[r, c] = e^{x[r]} * V[r, c]  (x <= 0), via Pallas.
+
+    x: (rows,) float; v: (rows, d) float32/bfloat16.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    rows, d = v.shape
+    br = min(block_rows, rows)
+    bd = min(block_d, d)
+    x2 = x.reshape(rows, 1).astype(jnp.float32)
+    grid = (pl.cdiv(rows, br), pl.cdiv(d, bd))
+    return pl.pallas_call(
+        _expmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((br, bd), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(v.shape, v.dtype),
+        interpret=interpret,
+    )(x2, v)

@@ -1,0 +1,51 @@
+"""Public jit'd wrappers for the ExpMul operator.
+
+``expmul_rows`` is the shape-agnostic entry point used by the rest of the
+framework; it routes to the Pallas kernel for 2-D row/vector layouts and to
+the pure-jnp bit path (same semantics) for anything else.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.expmul.expmul import expmul_pallas
+from repro.numerics.log2exp import expmul as expmul_jnp
+
+
+def expmul_rows(x: jax.Array, v: jax.Array, *, use_pallas: bool = True) -> jax.Array:
+    """ExpMul over rows: out[r, :] = e^{x[r]} * v[r, :].
+
+    x: (rows,), v: (rows, d).
+    """
+    if use_pallas and v.ndim == 2 and x.ndim == 1:
+        return expmul_pallas(x, v)
+    return expmul_jnp(x.reshape(x.shape + (1,) * (v.ndim - x.ndim)), v)
+
+
+def expmul_bcast(x: jax.Array, v: jax.Array) -> jax.Array:
+    """General broadcasting ExpMul in plain jnp (bit-identical semantics)."""
+    return expmul_jnp(x, v)
+
+
+def merged_output_update(
+    o_star: jax.Array,
+    v_star: jax.Array,
+    m_prev: jax.Array,
+    m_cur: jax.Array,
+    s: jax.Array,
+    *,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Paper Eq. (5): one step of the merged [l, o] recurrence.
+
+    o*_i = ExpMul(m_{i-1} - m_i, o*_{i-1}) + ExpMul(s_i - m_i, v*_i)
+    Shapes: o_star/v_star (rows, d+1); m_prev/m_cur/s (rows,).
+    """
+    if use_pallas:
+        a = expmul_rows(m_prev - m_cur, o_star)
+        b = expmul_rows(s - m_cur, v_star)
+    else:
+        a = expmul_jnp((m_prev - m_cur)[:, None], o_star)
+        b = expmul_jnp((s - m_cur)[:, None], v_star)
+    return a + b

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the ExpMul operator (paper Alg. 3), written in
+"textbook" float arithmetic (frexp/ldexp) rather than bit manipulation, so it
+cross-validates the bit-twiddling Pallas kernel structurally.
+
+Contract: finite inputs; denormal V flushes to zero (matching the hardware,
+whose biased-exponent field of a denormal is 0 and always underflows).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.numerics.log2exp import CLIP_HI, CLIP_LO, FRAC_BITS, FRAC_SCALE, ROUND_HALF
+
+_MIN_NORMAL = 2.0 ** -126  # f32 and bf16 share the 8-bit exponent / bias 127
+
+
+def _lhat_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """L_hat via floor-division arithmetic (== arithmetic shifts)."""
+    xc = jnp.clip(x.astype(jnp.float32), CLIP_LO, CLIP_HI)
+    xfix = jnp.round(xc * FRAC_SCALE).astype(jnp.int32)  # fits 16-bit; int32 lanes
+    acc = xfix + jnp.floor_divide(xfix, 2) - jnp.floor_divide(xfix, 16)
+    lhat = jnp.floor_divide(-acc + ROUND_HALF, 1 << FRAC_BITS)
+    return lhat.astype(jnp.int32)
+
+
+def expmul_ref(x: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for ExpMul(x, V) = e^x V under the paper's log2 quantization."""
+    lhat = _lhat_ref(x)
+    vf = v.astype(jnp.float32)
+    mant, expo = jnp.frexp(vf)
+    # biased f32/bf16 exponent field of a normal v = expo + 126
+    biased = expo + 126
+    new_biased = biased - lhat
+    out = jnp.ldexp(mant, expo - lhat)
+    flush = (new_biased <= 0) | (jnp.abs(vf) < _MIN_NORMAL)
+    out = jnp.where(flush, 0.0, out)
+    return out.astype(v.dtype)
+
+
+def expmul_exact_ref(x: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """The unfused baseline the paper compares against: separate exp and mul."""
+    return (jnp.exp(x.astype(jnp.float32)) * v.astype(jnp.float32)).astype(v.dtype)

@@ -1,0 +1,9 @@
+from repro.kernels.flash.ops import flash_attention_fwd
+from repro.kernels.flash.ref import attention_ref, flash2_blocked_ref, flash2_alg4_ref
+
+__all__ = [
+    "flash_attention_fwd",
+    "attention_ref",
+    "flash2_blocked_ref",
+    "flash2_alg4_ref",
+]

@@ -1,0 +1,191 @@
+"""Pallas TPU kernel: FlashAttention-2 forward, exact and ExpMul variants.
+
+Tiling: grid = (batch*heads, q_blocks, kv_blocks), kv innermost so the
+running (m, l, acc) state lives in VMEM scratch across kv steps. Per tile:
+
+  exact : s = qk^T;  p = exp(s - m);  alpha = exp(dm);  acc = acc*alpha + p@v
+  expmul: p = 2^{-Log2Exp(s - m)} assembled from bits (integer shift-add, no
+          transcendental); the acc/l rescale is an exponent-field integer
+          subtraction (apply_pow2_scale). Only the p@v MXU matmul remains in
+          floating point — this is the paper's ExpMul datapath mapped onto
+          the TPU's VPU/MXU split (DESIGN.md §2).
+
+Causal/local-window blocks that fall fully outside the band are skipped via
+``pl.when`` (no VPU/MXU work is issued for them).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU scratch memory spaces; interpret mode accepts them too
+    from jax.experimental.pallas import tpu as pltpu
+
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+from repro.numerics.log2exp import apply_pow2_scale, log2exp_lhat, pow2_neg
+
+MASK_VALUE = -1e30
+_LANES = 128
+
+
+def _fwd_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    scale,
+    causal,
+    window,
+    variant,
+    block_q,
+    block_k,
+    nk,
+    kv_len,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, MASK_VALUE)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    r0 = qi * block_q
+    c0 = ki * block_k
+    run = c0 < kv_len
+    if causal:
+        run = run & (c0 < r0 + block_q)
+    if window is not None:
+        run = run & (c0 + block_k > r0 - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)        # (bq, d)
+        k = k_ref[0].astype(jnp.float32)        # (bk, d)
+        v = v_ref[0].astype(jnp.float32)        # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        rows = r0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = c0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = cols < kv_len
+        if causal:
+            mask = mask & (rows >= cols)
+        if window is not None:
+            mask = mask & ((rows - cols) < window)
+        s = jnp.where(mask, s, MASK_VALUE)
+
+        m_prev = m_scr[...][:, :1]              # (bq, 1)
+        l_prev = l_scr[...][:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        if variant == "exact":
+            alpha = jnp.exp(m_prev - m_new)
+            p = jnp.exp(s - m_new)
+            p = jnp.where(mask, p, 0.0)
+            l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+            acc = acc_scr[...] * alpha + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+            )
+        elif variant == "expmul":
+            # paper Alg. 3/4: integer shift-add Log2Exp; probability tile is
+            # an exact power of two assembled from bits; state rescale is an
+            # exponent-field subtraction. No exp, no FP multiply.
+            lr = log2exp_lhat(m_prev - m_new)                       # (bq, 1)
+            p = pow2_neg(log2exp_lhat(s - m_new), jnp.float32)      # (bq, bk)
+            p = jnp.where(mask, p, 0.0)
+            l_new = apply_pow2_scale(l_prev, lr) + jnp.sum(p, axis=1, keepdims=True)
+            acc = apply_pow2_scale(
+                acc_scr[...], jnp.broadcast_to(lr, acc_scr.shape)
+            ) + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+            )
+        else:
+            raise ValueError(variant)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+        acc_scr[...] = acc
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        l = l_scr[...][:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "scale", "window", "variant", "block_q", "block_k",
+        "num_q_heads", "num_kv_heads", "kv_len", "interpret",
+    ),
+)
+def flash_fwd_pallas(
+    q3: jax.Array,   # (B*H, Sq_padded, D)
+    k3: jax.Array,   # (B*Hkv, Sk_padded, D)
+    v3: jax.Array,
+    *,
+    causal: bool,
+    scale: float,
+    window,
+    variant: str,
+    block_q: int,
+    block_k: int,
+    num_q_heads: int,
+    num_kv_heads: int,
+    kv_len: int,
+    interpret: bool,
+):
+    BH, Sq, D = q3.shape
+    Sk = k3.shape[1]
+    nq = Sq // block_q
+    nk = Sk // block_k
+    group = num_q_heads // num_kv_heads
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        b = bh // num_q_heads
+        h = bh % num_q_heads
+        return (b * num_kv_heads + h // group, ki, 0)
+
+    kernel = functools.partial(
+        _fwd_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        variant=variant,
+        block_q=block_q,
+        block_k=block_k,
+        nk=nk,
+        kv_len=kv_len,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), q_map),
+            pl.BlockSpec((1, block_k, D), kv_map),
+            pl.BlockSpec((1, block_k, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), q_map),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q3.dtype),
+        scratch_shapes=[
+            _VMEM((block_q, _LANES), jnp.float32),
+            _VMEM((block_q, _LANES), jnp.float32),
+            _VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q3, k3, v3)

@@ -1,0 +1,56 @@
+"""Public jit'd wrapper for the FlashAttention-2 Pallas forward kernel.
+
+Handles: 4-D (B, H, S, D) layout, GQA/MQA head folding, padding of both
+sequence axes to block multiples (the pad region is masked in-kernel via the
+static ``kv_len``), and CPU-interpret fallback for this container.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash.flash import flash_fwd_pallas
+
+
+def flash_attention_fwd(
+    q: jax.Array,   # (B, H, Sq, D)
+    k: jax.Array,   # (B, Hkv, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    window: int | None = None,
+    variant: str = "exact",
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert H % Hkv == 0, (H, Hkv)
+    assert v.shape[-1] == D, "pallas kernel requires Dq == Dv (MLA uses flash_jnp)"
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    scale = float(1.0 / np.sqrt(D)) if scale is None else float(scale)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    pq = (-Sq) % bq
+    pk = (-Sk) % bk
+    q3 = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0))).reshape(B * H, Sq + pq, D)
+    k3 = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0))).reshape(B * Hkv, Sk + pk, D)
+    v3 = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0))).reshape(B * Hkv, Sk + pk, D)
+    o3 = flash_fwd_pallas(
+        q3, k3, v3,
+        causal=causal,
+        scale=scale,
+        window=window,
+        variant=variant,
+        block_q=bq,
+        block_k=bk,
+        num_q_heads=H,
+        num_kv_heads=Hkv,
+        kv_len=Sk,
+        interpret=interpret,
+    )
+    return o3.reshape(B, H, Sq + pq, D)[:, :, :Sq, :]

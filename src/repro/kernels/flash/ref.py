@@ -1,0 +1,171 @@
+"""Pure-jnp oracles for the FlashAttention-2 kernels.
+
+Three references with distinct roles:
+
+* ``attention_ref``      — textbook softmax attention (ground truth).
+* ``flash2_blocked_ref`` — FlashAttention-2 with the *same* (block_q, block_k)
+  tile schedule as the Pallas kernel, in exact or ExpMul arithmetic. The
+  Pallas kernel is asserted bit-identical to this (same tile matmuls, same
+  update order).
+* ``flash2_alg4_ref``    — the paper's literal per-key Alg. 2 / Alg. 4
+  recurrence (one key/value per step, merged [l, o] vector per Eq. 3). This
+  is what the ASIC executes; used by the fidelity benchmarks and compared
+  statistically against the blocked schedule.
+
+All operate on single-head 2-D tensors: q (Sq, D); k, v (Sk, D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.numerics.log2exp import apply_pow2_scale, log2exp_lhat, pow2_neg
+
+MASK_VALUE = -1e30
+
+
+def _build_mask(rows, cols, *, causal, window, kv_len):
+    mask = cols < kv_len
+    if causal:
+        mask = mask & (rows >= cols)
+    if window is not None:
+        mask = mask & ((rows - cols) < window)
+    return mask
+
+
+def attention_ref(q, k, v, *, causal=False, scale=None, window=None):
+    """Ground-truth softmax attention (full matrix, f32)."""
+    Sq, D = q.shape
+    Sk = k.shape[0]
+    scale = (1.0 / np.sqrt(D)) if scale is None else scale
+    s = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T) * scale
+    rows = jnp.arange(Sq)[:, None]
+    cols = jnp.arange(Sk)[None, :]
+    mask = _build_mask(rows, cols, causal=causal, window=window, kv_len=Sk)
+    s = jnp.where(mask, s, MASK_VALUE)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    return jnp.dot(p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def flash2_blocked_ref(
+    q,
+    k,
+    v,
+    *,
+    causal=False,
+    scale=None,
+    window=None,
+    variant="exact",
+    block_q=128,
+    block_k=128,
+    kv_len=None,
+):
+    """FlashAttention-2 with the Pallas kernel's exact tile schedule."""
+    Sq, D = q.shape
+    Sk = k.shape[0]
+    kv_len = Sk if kv_len is None else kv_len
+    scale = (1.0 / np.sqrt(D)) if scale is None else scale
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    # pad to block multiples exactly as ops.py does
+    pq = (-Sq) % bq
+    pk = (-Sk) % bk
+    qp = jnp.pad(q, ((0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, pk), (0, 0)))
+    vp = jnp.pad(v, ((0, pk), (0, 0)))
+    nq = qp.shape[0] // bq
+    nk = kp.shape[0] // bk
+    out = jnp.zeros((qp.shape[0], D), jnp.float32)
+    for qi in range(nq):
+        qt = qp[qi * bq:(qi + 1) * bq].astype(jnp.float32)
+        m = jnp.full((bq, 1), MASK_VALUE, jnp.float32)
+        l = jnp.zeros((bq, 1), jnp.float32)
+        acc = jnp.zeros((bq, D), jnp.float32)
+        for ki in range(nk):
+            kt = kp[ki * bk:(ki + 1) * bk].astype(jnp.float32)
+            vt = vp[ki * bk:(ki + 1) * bk].astype(jnp.float32)
+            s = jax.lax.dot_general(
+                qt, kt, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+            ) * scale
+            rows = qi * bq + jnp.arange(bq)[:, None]
+            cols = ki * bk + jnp.arange(bk)[None, :]
+            mask = _build_mask(rows, cols, causal=causal, window=window, kv_len=kv_len)
+            s = jnp.where(mask, s, MASK_VALUE)
+            m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+            if variant == "exact":
+                alpha = jnp.exp(m - m_new)
+                p = jnp.exp(s - m_new)
+                p = jnp.where(mask, p, 0.0)
+                l = l * alpha + jnp.sum(p, axis=1, keepdims=True)
+                acc = acc * alpha + jax.lax.dot_general(
+                    p, vt, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+                )
+            elif variant == "expmul":
+                lr = log2exp_lhat(m - m_new)
+                p = pow2_neg(log2exp_lhat(s - m_new), jnp.float32)
+                p = jnp.where(mask, p, 0.0)
+                l = apply_pow2_scale(l, lr) + jnp.sum(p, axis=1, keepdims=True)
+                acc = apply_pow2_scale(acc, jnp.broadcast_to(lr, acc.shape)) + (
+                    jax.lax.dot_general(
+                        p, vt, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32,
+                    )
+                )
+            else:
+                raise ValueError(variant)
+            m = m_new
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        out = out.at[qi * bq:(qi + 1) * bq].set(acc / l_safe)
+    return out[:Sq].astype(q.dtype)
+
+
+def flash2_alg4_ref(q, k, v, *, causal=False, scale=None, variant="expmul"):
+    """The paper's per-key recurrence, merged [l, o] form (Alg. 4 / Eq. 3-5).
+
+    Processes one (k_i, v_i) per step exactly as the ASIC datapath does,
+    with v* = [1, v] and o* = [l, o]. ``variant='exact'`` gives Alg. 2.
+    """
+    Sq, D = q.shape
+    Sk = k.shape[0]
+    scale = (1.0 / np.sqrt(D)) if scale is None else scale
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s_all = jnp.dot(qf, kf.T) * scale                      # (Sq, Sk)
+    if causal:
+        rows = jnp.arange(Sq)[:, None]
+        cols = jnp.arange(Sk)[None, :]
+        s_all = jnp.where(rows >= cols, s_all, MASK_VALUE)
+
+    v_star = jnp.concatenate([jnp.ones((Sk, 1), jnp.float32), vf], axis=1)
+
+    def step(carry, xs):
+        m_prev, o_star = carry                              # (Sq,1), (Sq, D+1)
+        s_i, v_star_i = xs                                  # (Sq,), (D+1,)
+        s_i = s_i[:, None]
+        m_new = jnp.maximum(m_prev, s_i)
+        if variant == "expmul":
+            a = apply_pow2_scale(o_star, jnp.broadcast_to(log2exp_lhat(m_prev - m_new), o_star.shape))
+            b = apply_pow2_scale(
+                jnp.broadcast_to(v_star_i[None, :], o_star.shape),
+                jnp.broadcast_to(log2exp_lhat(s_i - m_new), o_star.shape),
+            )
+        else:
+            a = o_star * jnp.exp(m_prev - m_new)
+            b = v_star_i[None, :] * jnp.exp(s_i - m_new)
+        # masked keys contribute nothing (s_i = MASK_VALUE -> weight ~ 0, but
+        # the quantized path floors at 2^-22: zero it explicitly like hardware
+        # masking upstream of the datapath would)
+        b = jnp.where(s_i <= MASK_VALUE, 0.0, b)
+        return (m_new, a + b), None
+
+    init = (jnp.full((Sq, 1), MASK_VALUE, jnp.float32), jnp.zeros((Sq, D + 1), jnp.float32))
+    (m, o_star), _ = jax.lax.scan(step, init, (s_all.T, v_star))
+    l = o_star[:, :1]
+    o = o_star[:, 1:]
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (o / l).astype(q.dtype)

@@ -1,0 +1,82 @@
+"""Sweep every (arch x shape x mesh) dry-run cell in fresh subprocesses
+(one process per cell: jax locks the fake-device count at init, and a clean
+process also bounds compile-cache memory growth). Artifacts land in
+experiments/dryrun/<arch>__<shape>__<mesh>.json.
+
+  PYTHONPATH=src python -m repro.launch.dryrun_all [--multi-pod-only]
+      [--arch A] [--skip-existing]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import ARCH_IDS, cells_for
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def run_cell(arch, shape, multi_pod, out_dir, *, variant=None, timeout=1500,
+             overrides=()):
+    mesh = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape}__{mesh}" + (f"__{variant}" if variant else "")
+    out = os.path.join(out_dir, tag + ".json")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--out", out]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    if variant:
+        cmd += ["--variant", variant]
+    for ov in overrides:
+        cmd += ["--override", ov]
+    t0 = time.time()
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
+                       env={**os.environ, "PYTHONPATH": "src"},
+                       cwd=os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+    dt = time.time() - t0
+    ok = r.returncode == 0
+    status = "OK" if ok else "FAIL"
+    print(f"[{status}] {tag} ({dt:.0f}s)", flush=True)
+    if not ok:
+        tail = (r.stdout + r.stderr).splitlines()[-12:]
+        print("      " + "\n      ".join(tail), flush=True)
+        with open(out + ".err", "w") as f:
+            f.write(r.stdout + r.stderr)
+    return ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    out_dir = os.path.abspath(OUT_DIR)
+    os.makedirs(out_dir, exist_ok=True)
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    results = {}
+    for arch in archs:
+        for shape in cells_for(arch):
+            for mp in meshes:
+                mesh = "2x16x16" if mp else "16x16"
+                tag = f"{arch}__{shape.name}__{mesh}"
+                if args.skip_existing and os.path.exists(
+                    os.path.join(out_dir, tag + ".json")
+                ):
+                    print(f"[SKIP] {tag}")
+                    continue
+                results[tag] = run_cell(arch, shape.name, mp, out_dir)
+    n_ok = sum(results.values())
+    print(f"\n{n_ok}/{len(results)} cells compiled")
+    return 0 if n_ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

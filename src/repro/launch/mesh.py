@@ -1,0 +1,21 @@
+"""Production mesh builders.
+
+A function (not a module-level constant) so importing never touches jax
+device state. Single pod: (data=16, model=16) = 256 chips (v5e-256-like).
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the 'pod' axis carries
+data parallelism (and joins the FSDP axis for the 1T-class models) over DCI.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 4, n_model: int = 2):
+    """Small mesh for tests running with a handful of fake devices."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

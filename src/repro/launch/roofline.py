@@ -1,0 +1,174 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+  compute_term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory_term     = HLO_bytes_per_device / HBM_bw
+  collective_term = per-device collective wire bytes / link_bw
+
+``cost_analysis()`` gives per-device FLOPs and HBM bytes (the dry-run module
+is the post-SPMD per-device program). Collective bytes are parsed from the
+compiled HLO text: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute result shape (local), converted to ring-
+algorithm wire traffic with its replica-group size g:
+
+  all-gather        result_bytes * (g-1)/g
+  reduce-scatter    result_bytes * (g-1)          (operand = g * result)
+  all-reduce        2 * result_bytes * (g-1)/g
+  all-to-all        result_bytes * (g-1)/g
+  collective-permute result_bytes
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>\(?[a-z0-9\[\],\{\}: ]+?\)?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACES_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_BRACES_RE.search(line)
+    if m:  # explicit groups {{0,1},{2,3}} -> first group length
+        first = m.group(1).split("}")[0].strip("{")
+        return max(1, len([t for t in first.split(",") if t.strip() != ""]))
+    return 1
+
+
+def collective_bytes(hlo_text: str):
+    """-> (wire_bytes_total, per_op_breakdown dict)."""
+    seen_done = set()
+    total = 0.0
+    breakdown = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line:  # async pair: count the -start only
+            continue
+        op = m.group("op")
+        b = _shape_bytes(m.group("shape"))
+        g = _group_size(line)
+        if g <= 1:
+            continue
+        if op == "all-gather":
+            wire = b * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire = b * (g - 1)
+        elif op == "all-reduce":
+            wire = 2 * b * (g - 1) / g
+        elif op == "all-to-all":
+            wire = b * (g - 1) / g
+        else:  # collective-permute
+            wire = b
+        total += wire
+        breakdown[op] = breakdown.get(op, 0.0) + wire
+    return total, breakdown
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    step_s: float
+    model_flops: float
+    useful_flops_ratio: float
+    coll_breakdown: dict
+    transcendental_elems: float = 0.0
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, *, model_flops_per_device: float = 0.0) -> Roofline:
+    """Trip-count-aware roofline terms (see hlo_costs.py: XLA's own
+    cost_analysis counts while bodies once, so scanned layers/KV blocks
+    would be undercounted by their trip counts)."""
+    from repro.launch.hlo_costs import analyze_text
+
+    totals = analyze_text(compiled.as_text())
+    flops = totals["flops"]
+    hbm = totals["bytes"]
+    coll, breakdown = totals["coll"], totals["coll_breakdown"]
+    terms = {
+        "compute": flops / PEAK_FLOPS,
+        "memory": hbm / HBM_BW,
+        "collective": coll / LINK_BW,
+    }
+    bottleneck = max(terms, key=terms.get)
+    step = max(terms.values())
+    rf = Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=coll,
+        compute_s=terms["compute"],
+        memory_s=terms["memory"],
+        collective_s=terms["collective"],
+        bottleneck=bottleneck,
+        step_s=step,
+        model_flops=model_flops_per_device,
+        useful_flops_ratio=(model_flops_per_device / flops) if flops else 0.0,
+        coll_breakdown=breakdown,
+    )
+    rf.transcendental_elems = totals.get("transcendental_elems", 0.0)
+    return rf
+
+
+def model_flops_per_device(cfg, shape, n_devices: int) -> float:
+    """MODEL_FLOPS = 6*N*D (train, N=active params, D=tokens) or 2*N*D
+    (inference fwd) + attention KV term for decode, per device."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence + KV-cache attention reads
+        tokens = shape.global_batch
+        hd = cfg.resolved_head_dim()
+        attn_layers = sum(1 for k in cfg.pattern_for() if k == "attn") \
+            if not cfg.encoder_layers else cfg.decoder_layers
+        span = min(shape.seq_len, cfg.window) if cfg.window else shape.seq_len
+        kv_flops = 4.0 * attn_layers * cfg.num_heads * hd * span * tokens
+        total = 2.0 * n_active * tokens + kv_flops
+    return total / n_devices

@@ -1,0 +1,153 @@
+"""Standard GQA/MQA/MHA attention layer with RoPE, optional QKV bias and
+local windows. Both full-sequence (train/prefill) and single-token decode
+(KV cache) paths route through ``repro.core.attention`` — i.e. through the
+paper's exact/ExpMul kernel selection."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import attention, decode_attention
+from repro.layers.common import dense_init
+from repro.layers.rotary import apply_rope
+
+
+def attn_init(key, cfg, dtype):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim()
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.num_heads, hd), dtype),
+        "wk": dense_init(ks[1], (d, cfg.num_kv_heads, hd), dtype),
+        "wv": dense_init(ks[2], (d, cfg.num_kv_heads, hd), dtype),
+        "wo": dense_init(ks[3], (cfg.num_heads, hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads, hd), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads, hd), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads, hd), dtype)
+    return p
+
+
+def _project_qkv(params, x, cfg, positions):
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"][None, :, None, :]
+        k = k + params["bk"][None, :, None, :]
+        v = v + params["bv"][None, :, None, :]
+    q = apply_rope(q, positions[:, None, :], cfg.rope_base)
+    k = apply_rope(k, positions[:, None, :], cfg.rope_base)
+    return q, k, v
+
+
+def attn_apply(params, x, cfg, *, positions=None, causal=True, window=None):
+    """x: (B, S, D) -> (B, S, D)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    o = attention(
+        q, k, v,
+        causal=causal,
+        window=window,
+        impl=cfg.attention_impl,
+        variant=cfg.attention_variant,
+        block_k=cfg.attention_block_k,
+        remat=cfg.remat,
+        q_chunks=cfg.attention_q_chunks,
+    )
+    return jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+
+
+def cross_attn_init(key, cfg, dtype):
+    """Encoder-decoder cross attention (no RoPE, keys/values from encoder)."""
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim()
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, cfg.num_heads, hd), dtype),
+        "wk": dense_init(ks[1], (d, cfg.num_kv_heads, hd), dtype),
+        "wv": dense_init(ks[2], (d, cfg.num_kv_heads, hd), dtype),
+        "wo": dense_init(ks[3], (cfg.num_heads, hd, d), dtype),
+    }
+
+
+def cross_attn_kv(params, enc_out):
+    k = jnp.einsum("bsd,dhk->bhsk", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", enc_out, params["wv"])
+    return k, v
+
+
+def cross_attn_apply(params, x, enc_out, cfg, *, kv=None):
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
+    k, v = cross_attn_kv(params, enc_out) if kv is None else kv
+    o = attention(
+        q, k, v,
+        causal=False,
+        impl=cfg.attention_impl,
+        variant=cfg.attention_variant,
+        block_k=cfg.attention_block_k,
+        remat=cfg.remat,
+        q_chunks=cfg.attention_q_chunks,
+    )
+    return jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+
+
+def cross_attn_decode(params, x1, kv, enc_len, cfg):
+    """x1: (B, D); kv: precomputed (k, v) from the encoder output."""
+    q = jnp.einsum("bd,dhk->bhk", x1, params["wq"])
+    k, v = kv
+    o = decode_attention(
+        q, k, v, enc_len,
+        impl="xla",
+        variant=cfg.attention_variant,
+    )
+    return jnp.einsum("bhk,hkd->bd", o, params["wo"])
+
+
+def attn_init_cache(cfg, batch, max_len, dtype):
+    hd = cfg.resolved_head_dim()
+    return {
+        "k": jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), dtype),
+        "v": jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), dtype),
+    }
+
+
+def attn_decode_step(params, cache, x1, cfg, lengths, *, write_pos=None,
+                     attn_len=None):
+    """x1: (B, D) one token; lengths: (B,) absolute positions (pre-insert).
+
+    ``write_pos``/``attn_len`` support rolling (windowed) caches: RoPE uses
+    the absolute position while the cache slot wraps modulo the window —
+    softmax attention over the valid set is order-invariant, so a rolling
+    buffer is exact for local attention.
+    """
+    B, _ = x1.shape
+    if write_pos is None:
+        write_pos = lengths
+    if attn_len is None:
+        attn_len = lengths + 1
+    q = jnp.einsum("bd,dhk->bhk", x1, params["wq"])
+    k = jnp.einsum("bd,dhk->bhk", x1, params["wk"])
+    v = jnp.einsum("bd,dhk->bhk", x1, params["wv"])
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = apply_rope(q[:, :, None, :], lengths[:, None, None], cfg.rope_base)[:, :, 0]
+    k = apply_rope(k[:, :, None, :], lengths[:, None, None], cfg.rope_base)[:, :, 0]
+
+    def upd(buf, new, pos):  # per-batch dynamic slice update
+        return jax.vmap(
+            lambda b, n, p: jax.lax.dynamic_update_slice(b, n[:, None, :], (0, p, 0))
+        )(buf, new, pos)
+
+    k_cache = upd(cache["k"], k, write_pos)
+    v_cache = upd(cache["v"], v, write_pos)
+    o = decode_attention(
+        q, k_cache, v_cache, attn_len,
+        impl="pallas" if cfg.attention_impl == "pallas" else "xla",
+        variant=cfg.attention_variant,
+    )
+    out = jnp.einsum("bhk,hkd->bd", o, params["wo"])
+    return {"k": k_cache, "v": v_cache}, out

@@ -1,0 +1,36 @@
+"""Token embeddings and the (optionally tied) output head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.layers.common import dense_init
+
+
+def embed_init(key, cfg, dtype):
+    p = {"table": dense_init(key, (cfg.vocab_size, cfg.d_model), dtype, scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["out"] = dense_init(jax.random.fold_in(key, 1),
+                              (cfg.d_model, cfg.vocab_size), dtype)
+    return p
+
+
+def embed_apply(params, tokens, cfg):
+    x = jnp.take(params["table"], tokens, axis=0)
+    if cfg.scale_embeddings:
+        x = x * np.sqrt(cfg.d_model).astype(np.float32)
+    return x
+
+
+def logits_apply(params, x, cfg):
+    # logits stay in the model compute dtype: the f32 work in the loss is
+    # done by fused reductions (loss_fn), never a full (B,S,V) f32 buffer.
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, params["table"])
+    else:
+        logits = x @ params["out"]
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = (jnp.tanh(logits.astype(jnp.float32) / c) * c).astype(logits.dtype)
+    return logits

@@ -1,0 +1,122 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 family).
+
+Queries and keys/values are produced through low-rank latents; the decode
+cache stores only the KV latent + shared RoPE key (kv_lora_rank +
+qk_rope_dim per token instead of 2*H*hd). The attention core itself still
+routes through ``repro.core.attention`` so the ExpMul technique applies
+unchanged (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.attention import attention, decode_attention
+from repro.layers.common import dense_init, rmsnorm, rmsnorm_init
+from repro.layers.rotary import apply_rope
+
+
+def mla_init(key, cfg, dtype):
+    m = cfg.mla
+    d = cfg.d_model
+    H = cfg.num_heads
+    qk_head = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "w_dq": dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "q_norm": rmsnorm_init(m.q_lora_rank, dtype),
+        "w_uq": dense_init(ks[1], (m.q_lora_rank, H, qk_head), dtype),
+        "w_dkv": dense_init(ks[2], (d, m.kv_lora_rank + m.qk_rope_dim), dtype),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+        "w_ukv": dense_init(ks[3], (m.kv_lora_rank, H, m.qk_nope_dim + m.v_head_dim), dtype),
+        "wo": dense_init(ks[4], (H, m.v_head_dim, d), dtype),
+    }
+
+
+def _mla_qkv(params, x, cfg, positions):
+    m = cfg.mla
+    H = cfg.num_heads
+    # queries through the q-latent
+    q_lat = rmsnorm(params["q_norm"], x @ params["w_dq"])
+    q = jnp.einsum("bsr,rhk->bhsk", q_lat, params["w_uq"])
+    q_nope, q_rope = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = apply_rope(q_rope, positions[:, None, :], cfg.rope_base)
+    # kv latent + shared rope key
+    dkv = x @ params["w_dkv"]
+    kv_lat = rmsnorm(params["kv_norm"], dkv[..., : m.kv_lora_rank])
+    k_rope = apply_rope(dkv[..., None, :, m.kv_lora_rank:], positions[:, None, :], cfg.rope_base)
+    ukv = jnp.einsum("bsr,rhk->bhsk", kv_lat, params["w_ukv"])
+    k_nope, v = ukv[..., : m.qk_nope_dim], ukv[..., m.qk_nope_dim:]
+    k_rope = jnp.broadcast_to(k_rope, (*k_nope.shape[:-1], m.qk_rope_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope], axis=-1)
+    return q_full, k_full, v, kv_lat, dkv[..., m.kv_lora_rank:]
+
+
+def mla_apply(params, x, cfg, *, positions=None, causal=True, window=None):
+    B, S, _ = x.shape
+    m = cfg.mla
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v, _, _ = _mla_qkv(params, x, cfg, positions)
+    scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    o = attention(
+        q, k, v,
+        causal=causal,
+        scale=scale,
+        window=window,
+        impl=cfg.attention_impl,
+        variant=cfg.attention_variant,
+        block_k=cfg.attention_block_k,
+        remat=cfg.remat,
+        q_chunks=cfg.attention_q_chunks,
+    )
+    return jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+
+
+def mla_init_cache(cfg, batch, max_len, dtype):
+    m = cfg.mla
+    # latent cache: rank + rope dims per token (the MLA memory win)
+    return {
+        "kv_lat": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode_step(params, cache, x1, cfg, lengths, *, window=None):
+    m = cfg.mla
+    B = x1.shape[0]
+    x = x1[:, None, :]
+    pos = lengths[:, None]
+    q, _, _, kv_lat, k_rope_raw = _mla_qkv(params, x, cfg, pos)
+    q1 = q[:, :, 0]                                   # (B, H, qk_head)
+
+    def upd(buf, new, p):
+        return jax.vmap(
+            lambda b, n, pp: jax.lax.dynamic_update_slice(b, n, (pp, 0))
+        )(buf, new, p)
+
+    kv_lat_c = upd(cache["kv_lat"], kv_lat, lengths)
+    k_rope_c = upd(
+        cache["k_rope"],
+        apply_rope(k_rope_raw[:, None, :, :], pos[:, None], cfg.rope_base)[:, 0],
+        lengths,
+    )
+    # expand latents for attention (naive MLA decode; absorbed-matmul form is
+    # a recorded beyond-paper optimization — EXPERIMENTS.md §Perf)
+    ukv = jnp.einsum("bsr,rhk->bhsk", kv_lat_c, params["w_ukv"])
+    k_nope, v = ukv[..., : m.qk_nope_dim], ukv[..., m.qk_nope_dim:]
+    k_rope = jnp.broadcast_to(
+        k_rope_c[:, None], (B, cfg.num_heads, k_rope_c.shape[1], m.qk_rope_dim)
+    )
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    o = decode_attention(
+        q1, k, v, lengths + 1,
+        scale=scale,
+        impl="xla",
+        variant=cfg.attention_variant,
+    )
+    out = jnp.einsum("bhk,hkd->bd", o, params["wo"])
+    return {"kv_lat": kv_lat_c, "k_rope": k_rope_c}, out

@@ -1,0 +1,29 @@
+"""Gated MLP (SwiGLU / GeGLU) and plain MLP blocks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import activation_fn, dense_init
+
+
+def mlp_init(key, d_model, d_ff, activation, dtype):
+    ks = jax.random.split(key, 3)
+    gated = activation in ("swiglu", "geglu")
+    p = {
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def mlp_apply(params, x, activation):
+    act = activation_fn(activation)
+    up = x @ params["w_up"]
+    if "w_gate" in params:
+        up = act(x @ params["w_gate"]) * up
+    else:
+        up = act(up)
+    return up @ params["w_down"]

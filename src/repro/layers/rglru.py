@@ -1,0 +1,98 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Recurrence: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t) with
+a_t = exp(-c * softplus(Lambda) * r_t), r/i input-gated. Parallelized over
+the sequence with an associative scan; O(1)-state single-step path for
+decode. The temporal block is: in-proj to two branches, (conv1d(4) ->
+RG-LRU) on one, GeLU on the other, elementwise merge, out-proj.
+
+No softmax attention exists here, so the paper's ExpMul operator does not
+apply to this block type (DESIGN.md §4) — the 1:2 local-attention layers of
+recurrentgemma still use it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import dense_init
+
+_C = 8.0
+_CONV_W = 4
+
+
+def rglru_init(key, cfg, dtype):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in_rec": dense_init(ks[0], (d, w), dtype),
+        "w_in_gate": dense_init(ks[1], (d, w), dtype),
+        "conv": dense_init(ks[2], (_CONV_W, w), dtype, scale=0.5),
+        "w_a": dense_init(ks[3], (w, w), dtype),
+        "b_a": jnp.zeros((w,), dtype),
+        "w_x": dense_init(ks[4], (w, w), dtype),
+        "b_x": jnp.zeros((w,), dtype),
+        # Lambda init so that a^c in ~(0.9, 0.999) (Griffin appendix)
+        "lam": jax.random.uniform(ks[5], (w,), jnp.float32, 2.0, 5.0).astype(dtype),
+        "w_out": dense_init(ks[6], (w, d), dtype),
+    }
+
+
+def _gates(params, u):
+    r = jax.nn.sigmoid((u @ params["w_a"]).astype(jnp.float32)
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ params["w_x"]).astype(jnp.float32)
+                       + params["b_x"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = i * u.astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * gated
+
+
+def _conv(params, u, state=None):
+    """Causal depthwise conv, width 4. u: (B, S, W)."""
+    w = params["conv"].astype(jnp.float32)          # (4, W)
+    if state is None:
+        pad = jnp.pad(u.astype(jnp.float32), ((0, 0), (_CONV_W - 1, 0), (0, 0)))
+    else:
+        pad = jnp.concatenate([state.astype(jnp.float32), u.astype(jnp.float32)], axis=1)
+    out = sum(pad[:, i:i + u.shape[1]] * w[i] for i in range(_CONV_W))
+    return out.astype(u.dtype), pad[:, -(_CONV_W - 1):].astype(u.dtype)
+
+
+def rglru_apply(params, x, cfg):
+    """x: (B, S, D) -> (B, S, D), parallel (associative scan) mode."""
+    u = x @ params["w_in_rec"]
+    g = jax.nn.gelu((x @ params["w_in_gate"]).astype(jnp.float32), approximate=True)
+    u, _ = _conv(params, u)
+    a, b = _gates(params, u)                        # (B, S, W) f32
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h * g).astype(x.dtype)
+    return y @ params["w_out"]
+
+
+def rglru_init_cache(cfg, batch, dtype):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_W - 1, w), dtype),
+    }
+
+
+def rglru_decode_step(params, cache, x1, cfg):
+    """x1: (B, D) -> (B, D); O(1) state update."""
+    u = x1 @ params["w_in_rec"]
+    g = jax.nn.gelu((x1 @ params["w_in_gate"]).astype(jnp.float32), approximate=True)
+    u2, conv_state = _conv(params, u[:, None, :], cache["conv"])
+    a, b = _gates(params, u2[:, 0])
+    h = a * cache["h"] + b
+    y = (h * g).astype(x1.dtype)
+    return {"h": h, "conv": conv_state}, y @ params["w_out"]

@@ -1,0 +1,19 @@
+"""Rotary position embeddings (supports partial-dim RoPE for MLA)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(dim: int, base: float):
+    return 1.0 / (base ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, base: float = 10000.0):
+    """x: (..., S, D_even); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, base)
+    ang = positions[..., None].astype(jnp.float32) * inv      # (..., S, d/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,244 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential recurrence).
+
+mLSTM per head: C_t = f_t C_{t-1} + i_t v_t k_t^T ; n_t = f_t n_{t-1} + i_t k_t
+               h_t = C_t q_t / max(|n_t^T q_t|, 1)
+with exponential input gate and sigmoid forget gate stabilized by a running
+max m_t (the xLSTM stabilizer). Trained/prefilled in chunkwise-parallel form
+(quadratic within a chunk, recurrent across chunks); decoded with the O(1)
+recurrent state. Q/K/V are block-diagonal per head (as in the published
+models), up-projection factor 1.5 — this lands xlstm-1.3b in its size class.
+
+sLSTM: scalar cell at model width with block-diagonal (per-head) input and
+recurrent gate weights, followed by a gated FFN (pf 4/3).
+
+There is no softmax attention here: the paper's ExpMul precondition
+(x <= 0 so e^x in (0,1]) does NOT hold for the signed, unbounded gate
+pre-activations, so the technique is inapplicable to this family
+(DESIGN.md §4 — implemented without it, not skipped).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import activation_fn, dense_init
+
+_PROJ = 1.5      # mLSTM up-projection factor
+_FFN_PF = 4 / 3  # sLSTM post-FFN factor
+
+
+def _dims(cfg):
+    nh = cfg.num_heads
+    inner = int(_PROJ * cfg.d_model)
+    inner -= inner % nh
+    return inner, nh, inner // nh
+
+
+def mlstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    inner, nh, dh = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, inner), dtype),
+        "w_gate": dense_init(ks[1], (d, inner), dtype),
+        "wqh": dense_init(ks[2], (nh, dh, dh), dtype),   # block-diagonal
+        "wkh": dense_init(ks[3], (nh, dh, dh), dtype),
+        "wvh": dense_init(ks[4], (nh, dh, dh), dtype),
+        "w_i": dense_init(ks[5], (inner, nh), dtype),
+        "b_i": jnp.zeros((nh,), dtype),
+        "w_f": dense_init(ks[6], (inner, nh), dtype),
+        "b_f": jnp.full((nh,), 3.0, dtype),  # open forget gates at init
+        "w_down": dense_init(ks[7], (inner, d), dtype),
+    }
+
+
+def _mlstm_qkvif(params, u, cfg):
+    inner, nh, dh = _dims(cfg)
+    B, S, _ = u.shape
+    uh = u.reshape(B, S, nh, dh)
+    q = jnp.einsum("bshd,hde->bhse", uh, params["wqh"])
+    k = jnp.einsum("bshd,hde->bhse", uh, params["wkh"]) / jnp.sqrt(dh)
+    v = jnp.einsum("bshd,hde->bhse", uh, params["wvh"])
+    i_pre = (u @ params["w_i"]).astype(jnp.float32) + params["b_i"].astype(jnp.float32)
+    f_pre = (u @ params["w_f"]).astype(jnp.float32) + params["b_f"].astype(jnp.float32)
+    return q, k, v, i_pre.transpose(0, 2, 1), f_pre.transpose(0, 2, 1)  # (B,nh,S)
+
+
+def mlstm_apply(params, x, cfg, *, chunk=256):
+    """Chunkwise-parallel mLSTM. x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    inner, nh, dh = _dims(cfg)
+    u = x @ params["w_up"]
+    g = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32))
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(params, u, cfg)
+    L = min(chunk, S)
+    if S % L:
+        L = next(l for l in range(L, 0, -1) if S % l == 0)
+    nC = S // L
+
+    def split(t):  # (B,nh,S,...) -> (nC, B, nh, L, ...)
+        return jnp.moveaxis(t.reshape(*t.shape[:2], nC, L, *t.shape[3:]), 2, 0)
+
+    qs, ks_, vs = (split(t.astype(jnp.float32)) for t in (q, k, v))
+    is_, fs = split(i_pre), split(f_pre)
+    logf = jax.nn.log_sigmoid(fs)                      # (nC,B,nh,L)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def body(carry, xs):
+        # Stabilized chunk recurrence. Stored state is the true state scaled
+        # by exp(-m): C_true = C * e^m. With cum_t = sum_{s<=t} log f_s and
+        # b_t = max_{s<=t} (i_s - cum_s), the per-position stabilizer is
+        # m_t = cum_t + max(m_in, b_t)  (== the sequential m recurrence).
+        C, n, m_in = carry                # (B,nh,dh,dh), (B,nh,dh), (B,nh)
+        qc, kc, vc, ic, lfc = xs          # (B,nh,L,dh) x3, (B,nh,L) x2
+        cum = jnp.cumsum(lfc, axis=-1)
+        bmax = jax.lax.cummax(ic - cum, axis=ic.ndim - 1)
+        mmax = jnp.maximum(m_in[..., None], bmax)            # (B,nh,L)
+        inter_w = jnp.exp(m_in[..., None] - mmax)            # (B,nh,L)
+        # pair weight (t, s<=t): exp(i_s - cum_s - mmax_t)  (all exponents <=0)
+        intra = jnp.exp(
+            ic[..., None, :] - cum[..., None, :] - mmax[..., :, None]
+        )
+        intra = jnp.where(tri, intra, 0.0)                   # (B,nh,Lt,Ls)
+        sqk = jnp.einsum("bhld,bhsd->bhls", qc, kc)
+        num = jnp.einsum("bhls,bhsd->bhld", intra * sqk, vc) \
+            + inter_w[..., None] * jnp.einsum("bhld,bhde->bhle", qc, C)
+        den = inter_w * jnp.einsum("bhld,bhd->bhl", qc, n) \
+            + jnp.einsum("bhls,bhls->bhl", intra, sqk)
+        h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # advance state to chunk end
+        m_out = cum[..., -1] + jnp.maximum(m_in, bmax[..., -1])
+        decay = jnp.exp(m_in + cum[..., -1] - m_out)         # (B,nh)
+        ins = jnp.exp(ic + cum[..., -1:] - cum - m_out[..., None])
+        C_new = decay[..., None, None] * C \
+            + jnp.einsum("bhs,bhsd,bhse->bhde", ins, kc, vc)
+        n_new = decay[..., None] * n + jnp.einsum("bhs,bhsd->bhd", ins, kc)
+        return (C_new, n_new, m_out), h
+
+    init = (
+        jnp.zeros((B, nh, dh, dh), jnp.float32),
+        jnp.zeros((B, nh, dh), jnp.float32),
+        jnp.full((B, nh), -1e30, jnp.float32),
+    )
+    _, hs = jax.lax.scan(body, init, (qs, ks_, vs, is_, logf))
+    h = jnp.moveaxis(hs, 0, 2).reshape(B, nh, S, dh).transpose(0, 2, 1, 3).reshape(B, S, inner)
+    y = (h * g).astype(x.dtype)
+    return y @ params["w_down"]
+
+
+def mlstm_init_cache(cfg, batch, dtype):
+    inner, nh, dh = _dims(cfg)
+    return {
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode_step(params, cache, x1, cfg):
+    B, D = x1.shape
+    inner, nh, dh = _dims(cfg)
+    u = x1 @ params["w_up"]
+    g = jax.nn.silu((x1 @ params["w_gate"]).astype(jnp.float32))
+    uh = u.reshape(B, nh, dh)
+    q = jnp.einsum("bhd,hde->bhe", uh, params["wqh"]).astype(jnp.float32)
+    k = (jnp.einsum("bhd,hde->bhe", uh, params["wkh"]) / jnp.sqrt(dh)).astype(jnp.float32)
+    v = jnp.einsum("bhd,hde->bhe", uh, params["wvh"]).astype(jnp.float32)
+    i_pre = (u @ params["w_i"]).astype(jnp.float32) + params["b_i"].astype(jnp.float32)
+    f_pre = (u @ params["w_f"]).astype(jnp.float32) + params["b_f"].astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(cache["m"] + logf, i_pre)
+    fw = jnp.exp(cache["m"] + logf - m_new)
+    iw = jnp.exp(i_pre - m_new)
+    C = fw[..., None, None] * cache["C"] + iw[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = fw[..., None] * cache["n"] + iw[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), 1.0)
+    h = (num / den[..., None]).reshape(B, inner)
+    y = (h * g).astype(x1.dtype)
+    return {"C": C, "n": n, "m": m_new}, y @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar memory at model width, block-diagonal gates + gated FFN
+# ---------------------------------------------------------------------------
+def _sdims(cfg):
+    nh = cfg.num_heads
+    d = cfg.d_model
+    assert d % nh == 0
+    f = int(_FFN_PF * d)
+    return nh, d // nh, f
+
+
+def slstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    nh, dh, f = _sdims(cfg)
+    ks = jax.random.split(key, 11)
+    p = {}
+    for j, gate in enumerate(("z", "i", "f", "o")):
+        p[f"w_{gate}"] = dense_init(ks[j], (nh, dh, dh), dtype)
+        p[f"r_{gate}"] = dense_init(ks[4 + j], (nh, dh, dh), dtype, scale=0.02)
+        p[f"b_{gate}"] = (jnp.full((d,), 1.0, dtype) if gate == "f"
+                          else jnp.zeros((d,), dtype))
+    p["ffn_gate"] = dense_init(ks[8], (d, f), dtype)
+    p["ffn_up"] = dense_init(ks[9], (d, f), dtype)
+    p["ffn_down"] = dense_init(ks[10], (f, d), dtype)
+    return p
+
+
+def _slstm_step(params, carry, x_t, cfg):
+    nh, dh, _ = _sdims(cfg)
+    c, n, h, m = carry                                   # (B, d) each, f32
+    B = x_t.shape[0]
+    xh = x_t.reshape(B, nh, dh)
+    hh = h.reshape(B, nh, dh).astype(x_t.dtype)
+
+    def pre(gate):
+        w = jnp.einsum("bhd,hde->bhe", xh, params[f"w_{gate}"])
+        r = jnp.einsum("bhd,hde->bhe", hh, params[f"r_{gate}"])
+        return (w + r).reshape(B, -1).astype(jnp.float32) \
+            + params[f"b_{gate}"].astype(jnp.float32)
+
+    z = jnp.tanh(pre("z"))
+    i_pre, f_pre, o = pre("i"), pre("f"), jax.nn.sigmoid(pre("o"))
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    iw = jnp.exp(i_pre - m_new)
+    fw = jnp.exp(logf + m - m_new)
+    c_new = fw * c + iw * z
+    n_new = fw * n + iw
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def _slstm_ffn(params, h, cfg):
+    act = activation_fn("swiglu")
+    return (act(h @ params["ffn_gate"]) * (h @ params["ffn_up"])) @ params["ffn_down"]
+
+
+def slstm_apply(params, x, cfg):
+    B, S, D = x.shape
+    init = tuple(jnp.zeros((B, D), jnp.float32) for _ in range(3)) + (
+        jnp.full((B, D), -1e30, jnp.float32),
+    )
+
+    def body(carry, x_t):
+        return _slstm_step(params, carry, x_t, cfg)
+
+    _, hs = jax.lax.scan(body, init, jnp.moveaxis(x, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    return _slstm_ffn(params, h, cfg)
+
+
+def slstm_init_cache(cfg, batch, dtype):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, d), -1e30, jnp.float32)}
+
+
+def slstm_decode_step(params, cache, x1, cfg):
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    (c, n, h, m), h_out = _slstm_step(params, carry, x1, cfg)
+    y = _slstm_ffn(params, h_out.astype(x1.dtype), cfg)
+    return {"c": c, "n": n, "h": h, "m": m}, y

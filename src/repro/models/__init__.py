@@ -1,0 +1,9 @@
+from repro.models.api import (
+    init_model,
+    forward,
+    loss_fn,
+    init_decode_state,
+    decode_step,
+)
+
+__all__ = ["init_model", "forward", "loss_fn", "init_decode_state", "decode_step"]

@@ -1,0 +1,330 @@
+"""Model assembly: init / forward / loss / decode for every assigned family.
+
+Layers are grouped into repeating *units* (cfg.block_pattern) and stacked on
+a leading axis so the whole depth runs under one ``lax.scan`` — this keeps
+the HLO (and 512-device SPMD compile time) independent of depth, and remat
+applies per-unit. Heterogeneous patterns (recurrentgemma's r,r,a;
+xLSTM's m...s) scan over multi-block units in true layer order.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.layers.attention_layer import (
+    cross_attn_apply,
+    cross_attn_decode,
+    cross_attn_init,
+    cross_attn_kv,
+)
+from repro.layers.common import dense_init, make_norm
+from repro.layers.embedding import embed_apply, embed_init, logits_apply
+from repro.layers.mlp import mlp_apply, mlp_init
+from repro.models.blocks import (
+    block_apply,
+    block_decode_step,
+    block_init,
+    block_init_cache,
+)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _unit(cfg: ModelConfig):
+    return cfg.block_pattern
+
+
+def _n_units(cfg: ModelConfig, total=None):
+    total = cfg.num_layers if total is None else total
+    assert total % len(_unit(cfg)) == 0, (total, _unit(cfg))
+    return total // len(_unit(cfg))
+
+
+def _stack_init(key, n, fn):
+    """vmap an init fn over n keys -> leading layer axis."""
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_model(key, cfg: ModelConfig):
+    pd = _pdtype(cfg)
+    norm_init, _ = make_norm(cfg.norm)
+    keys = jax.random.split(key, 8)
+    params = {
+        "embed": embed_init(keys[0], cfg, pd),
+        "final_norm": norm_init(cfg.d_model, pd),
+    }
+    if cfg.frontend:
+        params["frontend_proj"] = dense_init(
+            keys[1], (cfg.frontend_dim, cfg.d_model), pd
+        )
+    if cfg.encoder_layers:  # encoder-decoder
+        params["enc_units"] = tuple(
+            _stack_init(
+                jax.random.fold_in(keys[2], i),
+                _n_units(cfg, cfg.encoder_layers),
+                lambda k, kind=kind: block_init(k, cfg, kind, pd),
+            )
+            for i, kind in enumerate(_unit(cfg))
+        )
+        params["enc_final_norm"] = norm_init(cfg.d_model, pd)
+
+        def dec_block_init(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            p = block_init(k1, cfg, "attn", pd)
+            p["norm_cross"] = norm_init(cfg.d_model, pd)
+            p["cross"] = cross_attn_init(k2, cfg, pd)
+            return p
+
+        params["dec_units"] = (
+            _stack_init(keys[3], cfg.decoder_layers, dec_block_init),
+        )
+    else:
+        params["units"] = tuple(
+            _stack_init(
+                jax.random.fold_in(keys[2], i),
+                _n_units(cfg),
+                lambda k, kind=kind: block_init(k, cfg, kind, pd),
+            )
+            for i, kind in enumerate(_unit(cfg))
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def _run_stack(units_params, x, cfg, unit_kinds, *, positions, causal,
+               moe_impl):
+    from repro.sharding.constraints import constrain, model_axis_size
+
+    # Block-boundary activation sharding. When attention heads cannot use
+    # the 'model' axis (H % msize != 0) the stack runs fully sequence-
+    # parallel: every per-token op (norms, projections, FFN) works on S
+    # shards and only attention's K/V broadcast crosses ranks — this
+    # replaced 112GB/layer of activation gathers on llava (§Perf).
+    msize = model_axis_size()
+    S = x.shape[1]
+    seq_par = (
+        msize > 0
+        and cfg.num_heads % msize != 0
+        and S % msize == 0
+        and cfg.moe is None
+    )
+    bdry = ("batch", "model" if seq_par else None, None)
+
+    def unit_body(x, xs):
+        x = constrain(x, *bdry)
+        for pos, kind in enumerate(unit_kinds):
+            x = block_apply(xs[pos], x, cfg, kind, positions=positions,
+                            causal=causal, moe_impl=moe_impl)
+        x = constrain(x, *bdry)
+        return x, None
+
+    body = jax.checkpoint(unit_body) if cfg.remat else unit_body
+    x, _ = jax.lax.scan(body, x, units_params)
+    return x
+
+
+def _dec_block_apply(p, x, cfg, *, positions, enc_out, moe_impl):
+    """Decoder block: self-attn -> cross-attn -> ffn (each pre-normed)."""
+    from repro.layers.attention_layer import attn_apply
+    from repro.layers.mla import mla_apply
+    from repro.layers.moe import moe_apply
+
+    _, norm = make_norm(cfg.norm)
+    fn = mla_apply if cfg.mla else attn_apply
+    x = x + fn(p["mix"], norm(p["norm_mix"], x), cfg,
+               positions=positions, causal=True)
+    x = x + cross_attn_apply(p["cross"], norm(p["norm_cross"], x), enc_out, cfg)
+    h = norm(p["norm_ffn"], x)
+    if cfg.moe is not None:
+        h = moe_apply(p["ffn"], h, cfg, impl=moe_impl)
+    else:
+        h = mlp_apply(p["ffn"], h, cfg.activation)
+    return x + h
+
+
+def _run_decoder_stack(units_params, x, cfg, *, positions, enc_out, moe_impl):
+    def unit_body(x, p_l):
+        return _dec_block_apply(p_l, x, cfg, positions=positions,
+                                enc_out=enc_out, moe_impl=moe_impl), None
+
+    body = jax.checkpoint(unit_body) if cfg.remat else unit_body
+    x, _ = jax.lax.scan(body, x, units_params[0])
+    return x
+
+
+def forward(params, batch, cfg: ModelConfig, *, moe_impl="scatter"):
+    """batch: tokens (B, S_text) [+ frontend_embeds (B,T,F)] [+ enc_*].
+
+    Returns logits (B, S_total, V).
+    """
+    _, norm = make_norm(cfg.norm)
+    tokens = batch["tokens"]
+    x = embed_apply(params["embed"], tokens, cfg).astype(_dtype(cfg))
+    if cfg.frontend and "frontend_embeds" in batch and not cfg.encoder_layers:
+        fe = batch["frontend_embeds"].astype(_dtype(cfg)) @ params["frontend_proj"]
+        x = jnp.concatenate([fe, x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    if cfg.encoder_layers:
+        enc_in = batch["frontend_embeds"].astype(_dtype(cfg)) @ params["frontend_proj"]
+        Be, Se, _ = enc_in.shape
+        enc_pos = jnp.broadcast_to(jnp.arange(Se), (Be, Se))
+        enc_out = _run_stack(
+            params["enc_units"], enc_in, cfg, _unit(cfg),
+            positions=enc_pos, causal=False, moe_impl=moe_impl,
+        )
+        enc_out = norm(params["enc_final_norm"], enc_out)
+        x = _run_decoder_stack(
+            params["dec_units"], x, cfg,
+            positions=positions, enc_out=enc_out, moe_impl=moe_impl,
+        )
+    else:
+        x = _run_stack(
+            params["units"], x, cfg, _unit(cfg),
+            positions=positions, causal=True, moe_impl=moe_impl,
+        )
+    x = norm(params["final_norm"], x)
+    return logits_apply(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, moe_impl="scatter"):
+    """Next-token cross entropy over the text positions."""
+    logits = forward(params, batch, cfg, moe_impl=moe_impl)
+    tokens = batch["tokens"]
+    n_front = logits.shape[1] - tokens.shape[1]
+    logits = logits[:, n_front:]
+    targets = tokens[:, 1:]
+    logits = logits[:, :-1]
+    mask = batch.get("loss_mask")
+    mask = jnp.ones_like(targets, jnp.float32) if mask is None else mask[:, 1:]
+    # fused-stable CE: only (B, S) f32 intermediates, never a f32 logit cube
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0].astype(jnp.float32) + jnp.log(
+        jnp.sum(jnp.exp((logits - m).astype(jnp.float32)), axis=-1)
+    )
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - tgt.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_decode_state(cfg: ModelConfig, batch, max_len, *, enc_len=None):
+    dt = _dtype(cfg)
+
+    def stacked_cache(kind, n):
+        one = block_init_cache(cfg, kind, batch, max_len, dt)
+        return jax.tree.map(lambda l: jnp.zeros((n,) + l.shape, l.dtype) + l, one)
+
+    if cfg.encoder_layers:
+        hd = cfg.resolved_head_dim()
+        n = cfg.decoder_layers
+        state = {
+            "caches": (stacked_cache("attn", n),),
+            "cross_kv": (
+                jnp.zeros((n, batch, cfg.num_kv_heads, enc_len, hd), dt),
+                jnp.zeros((n, batch, cfg.num_kv_heads, enc_len, hd), dt),
+            ),
+            "enc_len": jnp.zeros((batch,), jnp.int32),
+        }
+        return state
+    nu = _n_units(cfg)
+    return {
+        "caches": tuple(stacked_cache(kind, nu) for kind in _unit(cfg)),
+    }
+
+
+def encode_for_decode(params, state, frontend_embeds, enc_lengths, cfg):
+    """Run the encoder once and stash per-layer cross K/V (enc-dec serving)."""
+    _, norm = make_norm(cfg.norm)
+    enc_in = frontend_embeds.astype(_dtype(cfg)) @ params["frontend_proj"]
+    B, Se, _ = enc_in.shape
+    enc_pos = jnp.broadcast_to(jnp.arange(Se), (B, Se))
+    enc_out = _run_stack(params["enc_units"], enc_in, cfg, _unit(cfg),
+                         positions=enc_pos, causal=False, moe_impl="scatter")
+    enc_out = norm(params["enc_final_norm"], enc_out)
+
+    def per_layer_kv(p_l):
+        return cross_attn_kv(p_l["cross"], enc_out)
+
+    ks, vs = jax.vmap(per_layer_kv)(params["dec_units"][0])
+    state = dict(state)
+    state["cross_kv"] = (ks, vs)
+    state["enc_len"] = enc_lengths
+    return state
+
+
+def decode_step(params, state, tokens1, lengths, cfg: ModelConfig):
+    """One serving step: tokens1 (B,) -> logits (B, V), updated state."""
+    _, norm = make_norm(cfg.norm)
+    x = embed_apply(params["embed"], tokens1[:, None], cfg)[:, 0].astype(_dtype(cfg))
+
+    if cfg.encoder_layers:
+        from repro.layers.attention_layer import attn_decode_step
+
+        def unit_body(x, xs):
+            p_l, c_l, kv_l = xs
+            h = norm(p_l["norm_mix"], x)
+            c_new, h = attn_decode_step(p_l["mix"], c_l, h, cfg, lengths)
+            x = x + h
+            h = norm(p_l["norm_cross"], x)
+            x = x + cross_attn_decode(p_l["cross"], h, kv_l, state["enc_len"], cfg)
+            h = norm(p_l["norm_ffn"], x)
+            x = x + mlp_apply(p_l["ffn"], h, cfg.activation)
+            return x, c_new
+
+        x, c_new = jax.lax.scan(
+            unit_body, x,
+            (params["dec_units"][0], state["caches"][0], state["cross_kv"]),
+        )
+        new_state = dict(state)
+        new_state["caches"] = (c_new,)
+    else:
+        # KV caches ride the scan CARRY and are updated with dynamic-update-
+        # slice at the unit index: with donated state buffers this is a true
+        # in-place update. (The previous xs->ys restacking materialized the
+        # whole stacked cache twice per token — §Perf gemma decode.)
+        def unit_body(carry, xs):
+            x, caches = carry
+            p_l, idx = xs
+            new_caches = []
+            for pos, kind in enumerate(_unit(cfg)):
+                c_l = jax.tree.map(
+                    lambda buf: jax.lax.dynamic_index_in_dim(
+                        buf, idx, 0, keepdims=False),
+                    caches[pos],
+                )
+                c_new, x = block_decode_step(p_l[pos], c_l, x, cfg, kind, lengths)
+                new_caches.append(jax.tree.map(
+                    lambda buf, n: jax.lax.dynamic_update_index_in_dim(
+                        buf, n.astype(buf.dtype), idx, 0),
+                    caches[pos], c_new,
+                ))
+            return (x, tuple(new_caches)), None
+
+        n_units = _n_units(cfg)
+        (x, new_caches), _ = jax.lax.scan(
+            unit_body, (x, state["caches"]),
+            (params["units"], jnp.arange(n_units)),
+        )
+        new_state = {"caches": new_caches}
+
+    x = norm(params["final_norm"], x)
+    logits = logits_apply(params["embed"], x, cfg)
+    return logits, new_state

@@ -1,0 +1,137 @@
+"""Transformer-family residual blocks: init / apply / decode dispatch over
+block kinds (attn | rglru | mlstm | slstm), each as norm -> mix -> residual,
+norm -> ffn -> residual (ffn optional: xLSTM blocks carry their own
+projections; MoE replaces the dense ffn)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.attention_layer import (
+    attn_apply,
+    attn_decode_step,
+    attn_init,
+    attn_init_cache,
+)
+from repro.layers.common import make_norm
+from repro.layers.mla import mla_apply, mla_decode_step, mla_init, mla_init_cache
+from repro.layers.mlp import mlp_apply, mlp_init
+from repro.layers.moe import moe_apply, moe_init
+from repro.layers.rglru import (
+    rglru_apply,
+    rglru_decode_step,
+    rglru_init,
+    rglru_init_cache,
+)
+from repro.layers.xlstm import (
+    mlstm_apply,
+    mlstm_decode_step,
+    mlstm_init,
+    mlstm_init_cache,
+    slstm_apply,
+    slstm_decode_step,
+    slstm_init,
+    slstm_init_cache,
+)
+
+
+def _has_ffn(cfg, kind):
+    return kind in ("attn", "rglru") and (cfg.d_ff > 0 or cfg.moe is not None)
+
+
+def block_init(key, cfg, kind, dtype):
+    norm_init, _ = make_norm(cfg.norm)
+    ks = jax.random.split(key, 4)
+    p = {"norm_mix": norm_init(cfg.d_model, dtype)}
+    if kind == "attn":
+        p["mix"] = mla_init(ks[0], cfg, dtype) if cfg.mla else attn_init(ks[0], cfg, dtype)
+    elif kind == "rglru":
+        p["mix"] = rglru_init(ks[0], cfg, dtype)
+    elif kind == "mlstm":
+        p["mix"] = mlstm_init(ks[0], cfg, dtype)
+    elif kind == "slstm":
+        p["mix"] = slstm_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if _has_ffn(cfg, kind):
+        p["norm_ffn"] = norm_init(cfg.d_model, dtype)
+        if cfg.moe is not None:
+            p["ffn"] = moe_init(ks[1], cfg, dtype)
+        else:
+            p["ffn"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.activation, dtype)
+    return p
+
+
+def block_apply(params, x, cfg, kind, *, positions=None, causal=True,
+                moe_impl="scatter"):
+    _, norm = make_norm(cfg.norm)
+    h = norm(params["norm_mix"], x)
+    window = cfg.window if kind == "attn" and cfg.window else None
+    if kind == "attn":
+        fn = mla_apply if cfg.mla else attn_apply
+        h = fn(params["mix"], h, cfg, positions=positions, causal=causal,
+               window=window)
+    elif kind == "rglru":
+        h = rglru_apply(params["mix"], h, cfg)
+    elif kind == "mlstm":
+        h = mlstm_apply(params["mix"], h, cfg)
+    elif kind == "slstm":
+        h = slstm_apply(params["mix"], h, cfg)
+    x = x + h
+    if "ffn" in params:
+        h = norm(params["norm_ffn"], x)
+        if cfg.moe is not None:
+            h = moe_apply(params["ffn"], h, cfg, impl=moe_impl)
+        else:
+            h = mlp_apply(params["ffn"], h, cfg.activation)
+        x = x + h
+    return x
+
+
+def block_init_cache(cfg, kind, batch, max_len, dtype):
+    if kind == "attn":
+        if cfg.mla:
+            return mla_init_cache(cfg, batch, max_len, dtype)
+        # local-attention layers only need a window-sized cache
+        span = min(max_len, cfg.window) if cfg.window else max_len
+        return attn_init_cache(cfg, batch, span if cfg.window else max_len, dtype)
+    if kind == "rglru":
+        return rglru_init_cache(cfg, batch, dtype)
+    if kind == "mlstm":
+        return mlstm_init_cache(cfg, batch, dtype)
+    if kind == "slstm":
+        return slstm_init_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def block_decode_step(params, cache, x1, cfg, kind, lengths):
+    _, norm = make_norm(cfg.norm)
+    h = norm(params["norm_mix"], x1)
+    if kind == "attn":
+        if cfg.mla:
+            cache, h = mla_decode_step(params["mix"], cache, h, cfg, lengths)
+        elif cfg.window:
+            # rolling buffer: slot wraps modulo the window span
+            span = cache["k"].shape[2]
+            cache, h = attn_decode_step(
+                params["mix"], cache, h, cfg, lengths,
+                write_pos=lengths % span,
+                attn_len=jnp.minimum(lengths + 1, span),
+            )
+        else:
+            cache, h = attn_decode_step(params["mix"], cache, h, cfg, lengths)
+    elif kind == "rglru":
+        cache, h = rglru_decode_step(params["mix"], cache, h, cfg)
+    elif kind == "mlstm":
+        cache, h = mlstm_decode_step(params["mix"], cache, h, cfg)
+    elif kind == "slstm":
+        cache, h = slstm_decode_step(params["mix"], cache, h, cfg)
+    x1 = x1 + h
+    if "ffn" in params:
+        h = norm(params["norm_ffn"], x1)
+        if cfg.moe is not None:
+            h = moe_apply(params["ffn"], h[:, None, :], cfg, impl="scatter")[:, 0]
+        else:
+            h = mlp_apply(params["ffn"], h, cfg.activation)
+        x1 = x1 + h
+    return cache, x1

@@ -1,0 +1,63 @@
+"""Batch construction for every (arch x shape) cell.
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins (no allocation) for
+the dry-run; ``make_batch`` materializes a random batch of the same
+structure for smoke tests and examples.
+
+Conventions (DESIGN.md §4):
+  * [vlm]/[audio] decoder-only: seq_len counts frontend tokens + text, so
+    tokens = seq_len - frontend_tokens and frontend embeddings are model
+    inputs (the frontend itself is a stub per the assignment).
+  * enc-dec: the encoder consumes ``frontend_tokens`` stub frames; the
+    decoder consumes seq_len text tokens.
+  * decode kind: one new token per sequence + a KV cache of seq_len
+    (serve_step); the *state* specs are produced by the caller.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def token_count(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.frontend and not cfg.encoder_layers:
+        return seq_len - cfg.frontend_tokens
+    return seq_len
+
+
+def input_specs(cfg: ModelConfig, *, seq_len: int, global_batch: int,
+                kind: str = "train"):
+    """ShapeDtypeStructs for one forward/train step's batch."""
+    B = global_batch
+    if kind in ("train", "prefill"):
+        S = token_count(cfg, seq_len)
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.frontend:
+            batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.frontend_dim), jnp.dtype(cfg.dtype)
+            )
+        return batch
+    if kind == "decode":
+        return {
+            "tokens1": jax.ShapeDtypeStruct((B,), jnp.int32),
+            "lengths": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+    raise ValueError(kind)
+
+
+def make_batch(key, cfg: ModelConfig, *, seq_len: int, global_batch: int,
+               kind: str = "train"):
+    """Random concrete batch matching input_specs."""
+    specs = input_specs(cfg, seq_len=seq_len, global_batch=global_batch, kind=kind)
+    kt, kf = jax.random.split(key)
+    out = {}
+    for name, s in specs.items():
+        if s.dtype == jnp.int32:
+            hi = cfg.vocab_size if name.startswith("token") else seq_len
+            out[name] = jax.random.randint(kt, s.shape, 0, hi, jnp.int32)
+        else:
+            out[name] = jax.random.normal(kf, s.shape, jnp.float32).astype(s.dtype)
+    return out

@@ -1,0 +1,21 @@
+from repro.numerics.log2exp import (
+    FRAC_BITS,
+    CLIP_LO,
+    CLIP_HI,
+    log2exp_lhat,
+    apply_pow2_scale,
+    pow2_neg,
+    expmul,
+    expmul_ste,
+)
+
+__all__ = [
+    "FRAC_BITS",
+    "CLIP_LO",
+    "CLIP_HI",
+    "log2exp_lhat",
+    "apply_pow2_scale",
+    "pow2_neg",
+    "expmul",
+    "expmul_ste",
+]

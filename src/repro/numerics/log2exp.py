@@ -1,0 +1,186 @@
+"""Fixed-point Log2Exp quantization and the ExpMul primitive (paper §IV-B).
+
+The paper replaces ``e^x * V`` (x <= 0) with::
+
+    x_hat = Fixed(Clip(x, -15, 0))                    # 16-bit, 10 frac bits
+    L_hat = -round(x_hat + x_hat>>1 - x_hat>>4)       # ~= round(-x*log2(e))
+    out   = Float(S_V, E_V - L_hat, M_V)              # exponent-field subtract
+
+i.e. ``e^x`` is quantized to the nearest power of two (with the shift-add
+constant 1.4375 approximating log2(e)=1.442695), and the multiply becomes an
+integer subtraction on the float exponent field. Underflow flushes to zero.
+
+These are the *reference semantics* shared bit-exactly by:
+  * the pure-jnp oracle  (``repro/kernels/expmul/ref.py``)
+  * the Pallas TPU kernel (``repro/kernels/expmul/expmul.py``)
+  * the fused FlashAttention-2 kernels (``repro/kernels/flash``)
+
+All functions are jit-safe and CPU/TPU portable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Fixed-point format (paper: 16-bit fixed point, 6 integer + 10 fraction bits
+# after the x*log2(e) range change to [-21.64, 0]).
+# ---------------------------------------------------------------------------
+FRAC_BITS = 10
+FRAC_SCALE = 1 << FRAC_BITS           # 1024
+ROUND_HALF = 1 << (FRAC_BITS - 1)     # 512, for round-half-up of -acc
+CLIP_LO = -15.0
+CLIP_HI = 0.0
+
+_F32_MANT_BITS = 23
+_F32_EXP_MASK = 0xFF
+_BF16_MANT_BITS = 7
+_BF16_EXP_MASK = 0xFF
+
+
+def _float_layout(dtype):
+    """(uint container dtype, mantissa bits, exponent mask) for a float dtype."""
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.float32:
+        return jnp.uint32, _F32_MANT_BITS, _F32_EXP_MASK
+    if dtype == jnp.bfloat16:
+        return jnp.uint16, _BF16_MANT_BITS, _BF16_EXP_MASK
+    raise ValueError(f"ExpMul supports float32/bfloat16, got {dtype}")
+
+
+def log2exp_lhat(x: jax.Array) -> jax.Array:
+    """Integer L_hat >= 0 such that e^x ~= 2^{-L_hat}  (x expected <= 0).
+
+    Bit-exact model of the paper's Alg. 3 lines 3-4:
+      * clip to [-15, 0]
+      * 16-bit two's-complement fixed point, 10 fraction bits
+      * x*log2(e) ~= x + x>>1 - x>>4 with *arithmetic* shifts (floor), exactly
+        as ASIC shifters behave on negative values
+      * round-half-up of the (positive) negated result to an integer
+    """
+    x = x.astype(jnp.float32)
+    xc = jnp.clip(x, CLIP_LO, CLIP_HI)
+    # Fixed(): round-to-nearest into 16-bit fixed point. Values are in
+    # [-15*1024, 0] = [-15360, 0], comfortably inside int16; we carry them in
+    # int32 lanes (TPU native) without changing the arithmetic.
+    xfix = jnp.round(xc * FRAC_SCALE).astype(jnp.int32)
+    acc = xfix + (xfix >> 1) - (xfix >> 4)   # arithmetic shifts: floor
+    neg = -acc                               # in [0, 22170] ~= -x*1.4375*1024
+    lhat = (neg + ROUND_HALF) >> FRAC_BITS   # round-half-up to integer
+    return lhat
+
+
+def apply_pow2_scale(v: jax.Array, lhat: jax.Array) -> jax.Array:
+    """Compute ``v * 2^{-lhat}`` by integer subtraction on the exponent field.
+
+    ``lhat`` must be a non-negative int32 broadcastable to ``v.shape``.
+    Biased-exponent underflow (<= 0) flushes to zero, as in the paper. The
+    sign and mantissa fields are untouched. Denormal inputs flush to zero.
+    """
+    uint, mant_bits, exp_mask = _float_layout(v.dtype)
+    bits = lax.bitcast_convert_type(v, uint)
+    wide = bits.astype(jnp.int32)
+    exp_field = (wide >> mant_bits) & exp_mask
+    new_exp = exp_field - lhat
+    underflow = new_exp <= 0
+    rest = wide & ~(exp_mask << mant_bits)
+    out = rest | (jnp.maximum(new_exp, 0) << mant_bits)
+    out = jnp.where(underflow, 0, out).astype(uint)
+    return lax.bitcast_convert_type(out, v.dtype)
+
+
+def pow2_neg(lhat: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Assemble the float ``2^{-lhat}`` directly from bits (no transcendental).
+
+    Used to build the quantized probability tile P = 2^{-L} that feeds the
+    MXU matmul in the FlashAttention-2 ExpMul kernel.
+    """
+    uint, mant_bits, exp_mask = _float_layout(dtype)
+    bias = 127
+    new_exp = bias - lhat
+    bits = jnp.where(new_exp <= 0, 0, new_exp << mant_bits).astype(uint)
+    return lax.bitcast_convert_type(bits, dtype)
+
+
+def expmul(x: jax.Array, v: jax.Array) -> jax.Array:
+    """ExpMul(x, V) = e^x * V under log2 quantization (paper Eq. 8-9).
+
+    ``x`` broadcasts against ``v`` (e.g. per-row scalars against row vectors).
+    """
+    lhat = log2exp_lhat(x)
+    lhat = jnp.broadcast_to(lhat, jnp.broadcast_shapes(lhat.shape, v.shape))
+    return apply_pow2_scale(v, lhat)
+
+
+@jax.custom_vjp
+def expmul_ste(x: jax.Array, v: jax.Array) -> jax.Array:
+    """ExpMul with a straight-through estimator for training.
+
+    Forward: quantized ExpMul exactly as the hardware computes it.
+    Backward: gradients of the *exact* ``e^x * v`` evaluated at the inputs
+    (the paper's accelerator is inference-only; this extension lets the same
+    numerics be used inside a training graph).
+    """
+    return expmul(x, v)
+
+
+def _expmul_ste_fwd(x, v):
+    return expmul(x, v), (x, v)
+
+
+def _expmul_ste_bwd(res, g):
+    x, v = res
+    e = jnp.exp(jnp.clip(x.astype(jnp.float32), CLIP_LO, CLIP_HI))
+    e = jnp.broadcast_to(e, g.shape)
+    dv = (e * g.astype(jnp.float32)).astype(v.dtype)
+    dx_full = e * v.astype(jnp.float32) * g.astype(jnp.float32)
+    # reduce broadcast dims of x
+    dx = _unbroadcast(dx_full, x.shape).astype(x.dtype)
+    return dx, dv
+
+
+def _unbroadcast(t: jax.Array, shape) -> jax.Array:
+    if t.shape == tuple(shape):
+        return t
+    ndiff = t.ndim - len(shape)
+    t = jnp.sum(t, axis=tuple(range(ndiff))) if ndiff else t
+    axes = tuple(i for i, (a, b) in enumerate(zip(t.shape, shape)) if b == 1 and a != 1)
+    if axes:
+        t = jnp.sum(t, axis=axes, keepdims=True)
+    return t.reshape(shape)
+
+
+expmul_ste.defvjp(_expmul_ste_fwd, _expmul_ste_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def exact_expmul(x: jax.Array, v: jax.Array) -> jax.Array:
+    """The exact ``e^x * v`` the hardware baseline computes (for comparison)."""
+    return jnp.exp(x.astype(jnp.float32)).astype(v.dtype) * v
+
+
+@jax.custom_vjp
+def qexp_ste(x: jax.Array) -> jax.Array:
+    """Quantized ``e^x`` -> exact power of two ``2^{-L_hat}``, with a
+    straight-through exact-exp gradient (for use inside training graphs).
+
+    Multiplying a normal float by this value is bit-identical to the
+    hardware's exponent-field subtraction (IEEE multiply by a power of two is
+    exact), modulo flush-to-zero on underflow which the kernels handle.
+    """
+    return pow2_neg(log2exp_lhat(x), jnp.float32)
+
+
+def _qexp_fwd(x):
+    return qexp_ste(x), x
+
+
+def _qexp_bwd(x, g):
+    e = jnp.exp(jnp.clip(x.astype(jnp.float32), CLIP_LO, CLIP_HI))
+    return ((e * g).astype(x.dtype),)
+
+
+qexp_ste.defvjp(_qexp_fwd, _qexp_bwd)

@@ -1,0 +1,12 @@
+from repro.optim.adamw import adamw
+from repro.optim.adafactor import adafactor
+from repro.optim.schedule import cosine_schedule, linear_warmup
+from repro.optim.clip import clip_by_global_norm
+
+__all__ = [
+    "adamw",
+    "adafactor",
+    "cosine_schedule",
+    "linear_warmup",
+    "clip_by_global_norm",
+]

@@ -1,0 +1,58 @@
+"""Adafactor (factored second moments): sublinear optimizer memory for the
+largest models — the v moment of an (a, b) matrix costs a+b instead of a*b."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.interface import Optimizer
+
+
+def adafactor(lr, *, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0):
+    def init(params):
+        def per(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"step": jnp.zeros((), jnp.int32),
+                "v": jax.tree.map(per, params, is_leaf=lambda x: hasattr(x, "shape"))}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(g, v, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if p.ndim >= 2:
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = (
+                    vr[..., None]
+                    / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)[..., None]
+                ) * vc[..., None, :]
+                u = gf / jnp.sqrt(jnp.maximum(denom, eps))
+                v_new = {"vr": vr, "vc": vc}
+            else:
+                vv = beta * v["v"] + (1 - beta) * g2
+                u = gf / jnp.sqrt(jnp.maximum(vv, eps))
+                v_new = {"v": vv}
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (-lr_t * u).astype(p.dtype), v_new
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        flat_p = tdef.flatten_up_to(params)
+        pairs = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+        updates = tdef.unflatten([u for u, _ in pairs])
+        v_new = tdef.unflatten([v for _, v in pairs])
+        return updates, {"step": step, "v": v_new}
+
+    return Optimizer(init, update)

@@ -1,0 +1,57 @@
+"""AdamW with configurable moment dtype (bf16 moments for the 1T-class
+models — halves optimizer HBM; stochastic-rounding-free since the master
+add happens in f32)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.interface import Optimizer
+
+
+def adamw(
+    lr,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    moment_dtype: str = "float32",
+):
+    """lr: float or step -> float schedule."""
+    mdt = jnp.dtype(moment_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            mhat = mf / (1 - b1 ** step.astype(jnp.float32))
+            vhat = vf / (1 - b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay and p.ndim >= 2:  # no decay on norms/biases
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * delta).astype(p.dtype), mf.astype(mdt), vf.astype(mdt)
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        flat_p = tdef.flatten_up_to(params)
+        outs = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = tdef.unflatten([o[0] for o in outs])
+        m_new = tdef.unflatten([o[1] for o in outs])
+        v_new = tdef.unflatten([o[2] for o in outs])
+        return updates, {"step": step, "m": m_new, "v": v_new}
+
+    return Optimizer(init, update)

@@ -1,0 +1,14 @@
+"""Gradient clipping."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    sq = jax.tree_util.tree_reduce(
+        lambda a, g: a + jnp.sum(g.astype(jnp.float32) ** 2), grads, jnp.zeros((), jnp.float32)
+    )
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm

@@ -1,0 +1,4 @@
+from repro.serve.engine import ServeEngine
+from repro.serve.sampling import sample_token
+
+__all__ = ["ServeEngine", "sample_token"]

@@ -1,0 +1,19 @@
+from repro.sharding.rules import (
+    batch_axes,
+    fsdp_axes,
+    param_spec,
+    param_shardings,
+    state_shardings,
+    batch_shardings,
+    decode_state_shardings,
+)
+
+__all__ = [
+    "batch_axes",
+    "fsdp_axes",
+    "param_spec",
+    "param_shardings",
+    "state_shardings",
+    "batch_shardings",
+    "decode_state_shardings",
+]

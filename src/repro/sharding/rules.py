@@ -1,0 +1,207 @@
+"""Logical-axis sharding rules: param-tree paths -> PartitionSpec.
+
+Scheme (DESIGN.md §5) on the (pod, data, model) production mesh:
+
+  * DP     : batch over ('pod', 'data')
+  * TP     : attention heads / ffn hidden / vocab over 'model'
+  * FSDP   : the d_model-ish axis of large 2D+ params over ('pod', 'data')
+             (XLA SPMD turns this into all-gather on use + reduce-scatter on
+             gradients — ZeRO-3 semantics)
+  * EP     : MoE expert axis over 'model' (experts replace TP for expert
+             FFN weights); token/capacity dims over DP axes
+  * SP     : decode KV caches with few kv-heads shard the *sequence* axis of
+             the cache over 'model' (cross-device flash-decode split-K)
+
+Every proposed axis is divisibility-checked against the dim; on mismatch we
+drop to the next candidate (or replicate) instead of relying on GSPMD's
+padded uneven sharding, which bloats the 1T-scale footprints.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def fsdp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh, axes):
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh, dim_size, *candidates):
+    """First candidate axis (or axis tuple) that divides dim_size; else None."""
+    for c in candidates:
+        if c is None:
+            return None
+        if dim_size % _axis_size(mesh, c) == 0:
+            return c
+    return None
+
+
+def param_spec(path: tuple[str, ...], shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Sharding spec for one parameter leaf. ``path`` is the key path with
+    layer-stack indices included; stacked unit params have the layer axis at
+    dim 0 (never sharded)."""
+    name = path[-1]
+    joined = "/".join(str(p) for p in path)
+    fs = fsdp_axes(mesh)
+    stacked = "units" in joined  # leading layer axis present
+
+    def spec(*dims):
+        full = ([None] if stacked else []) + list(dims)
+        full = full[: len(shape)]
+        while len(full) < len(shape):
+            full.append(None)
+        # divisibility check against the actual dims
+        out = []
+        for d, ax in zip(shape, full):
+            out.append(_fit(mesh, d, ax) if ax is not None else None)
+        return P(*out)
+
+    # ---- embeddings / head ------------------------------------------------
+    # vocab over 'model' only: sharding d_model here makes the logits matmul
+    # partial-sum over DP groups -> (B,S,V)-sized all-reduces (measured 40GB
+    # per step on qwen2 before this rule; see EXPERIMENTS.md §Perf).
+    if name == "table":
+        return P(_fit(mesh, shape[0], "model"), None)
+    if name == "out":
+        return P(None, _fit(mesh, shape[1], "model"))
+    if name == "frontend_proj":
+        return P(None, _fit(mesh, shape[1], "model"))
+
+    # ---- MoE (expert axis replaces TP) -------------------------------------
+    if "ffn" in joined and name in ("w_up", "w_gate", "w_down") and len(shape) == 4:
+        # (L, E, D, F) / (L, E, F, D): experts over model, d_model over fsdp
+        d_idx = 2 if name in ("w_up", "w_gate") else 3
+        dims = [None, "model", None, None]
+        dims[d_idx] = fs
+        return spec(*dims[1:])
+    if name == "router":
+        return spec(fs, None)
+
+    # ---- attention ----------------------------------------------------------
+    if name in ("wq", "wk", "wv"):  # (L, D, H|Hkv, hd)
+        return spec(fs, "model", None)
+    if name == "wo":
+        return spec("model", None, fs)
+    if name in ("bq", "bk", "bv"):
+        return spec("model", None)
+    # MLA
+    if name in ("w_dq", "w_dkv"):
+        return spec(fs, None)
+    if name in ("w_uq", "w_ukv"):
+        return spec(None, "model", None)
+
+    # ---- dense mlp -----------------------------------------------------------
+    if name in ("w_up", "w_gate", "ffn_up", "ffn_gate"):
+        return spec(fs, "model")
+    if name in ("w_down", "ffn_down"):
+        return spec("model", fs)
+
+    # ---- rg-lru ---------------------------------------------------------------
+    if name in ("w_in_rec", "w_in_gate"):
+        return spec(fs, "model")
+    if name in ("w_a", "w_x"):
+        return spec(None, "model")
+    if name == "w_out":
+        return spec("model", fs)
+    if name in ("b_a", "b_x", "lam"):
+        return spec("model")
+    if name == "conv":
+        return spec(None, "model")
+
+    # ---- xlstm ------------------------------------------------------------------
+    if name in ("wqh", "wkh", "wvh"):  # block-diagonal (L, nh, dh, dh)
+        return spec("model", None, None)
+    if name.startswith(("w_z", "w_i", "w_f", "w_o", "r_")):
+        if len(shape) == (4 if stacked else 3):  # slstm block-diag
+            return spec("model", None, None)
+        return spec(None, None)  # mlstm gate projections (small)
+
+    # ---- norms / biases / scalars --------------------------------------------
+    return P(*([None] * len(shape)))
+
+
+def param_shardings(params_shape, mesh: Mesh):
+    """ShapeDtypeStruct tree (or array tree) -> NamedSharding tree."""
+    def one(path, leaf):
+        keys = tuple(
+            getattr(k, "key", getattr(k, "idx", getattr(k, "name", str(k))))
+            for k in path
+        )
+        return NamedSharding(mesh, param_spec(keys, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def state_shardings(state_shape, mesh: Mesh):
+    """TrainState (params + opt moments mirror param sharding; scalars rep)."""
+    def one(path, leaf):
+        keys = tuple(
+            getattr(k, "key", getattr(k, "idx", getattr(k, "name", str(k))))
+            for k in path
+        )
+        if leaf.ndim == 0 or "count" in str(keys) or "step" in str(keys):
+            return NamedSharding(mesh, P())
+        # strip optimizer wrappers ('m'/'v'/'params' prefixes) down to the
+        # underlying param path
+        keys = tuple(k for k in keys if k not in ("m", "v", "params", "mu", "nu", "opt_state", "state"))
+        return NamedSharding(mesh, param_spec(keys, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, state_shape)
+
+
+def batch_shardings(batch_shape, mesh: Mesh):
+    """Input batch: leading dim over DP axes."""
+    ba = batch_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        dims = [_fit(mesh, leaf.shape[0], ba, "data" if "pod" in mesh.axis_names else None)]
+        dims += [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree.map(one, batch_shape)
+
+
+def decode_state_shardings(state_shape, mesh: Mesh, cfg):
+    """Decode caches: batch over DP; kv-head axis over 'model' when it fits,
+    otherwise the sequence axis (SP split-K); recurrent states width over
+    'model'."""
+    ba = batch_axes(mesh)
+
+    def one(path, leaf):
+        keys = tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        shape = leaf.shape
+        name = keys[-1] if keys else ""
+        stacked = 1  # leading layer-stack axis on caches
+        dims = [None] * leaf.ndim
+        if leaf.ndim >= 2:
+            dims[stacked] = _fit(mesh, shape[stacked], ba)
+        if name in ("k", "v") and leaf.ndim == 5:
+            # (L, B, Hkv, S, hd): heads over model else sequence (SP)
+            if shape[2] % _axis_size(mesh, "model") == 0:
+                dims[2] = "model"
+            elif shape[3] % _axis_size(mesh, "model") == 0:
+                dims[3] = "model"
+        elif name in ("kv_lat", "k_rope") and leaf.ndim == 4:
+            # (L, B, S, r): sequence split-K over model
+            if shape[2] % _axis_size(mesh, "model") == 0:
+                dims[2] = "model"
+        elif name in ("C",):  # (L, B, nh, dh, dh)
+            dims[-2] = _fit(mesh, shape[-2], "model")
+        elif name in ("h", "conv", "n", "c", "m"):
+            dims[-1] = _fit(mesh, shape[-1], "model")
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree_util.tree_map_with_path(one, state_shape)

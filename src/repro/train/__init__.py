@@ -1,0 +1,3 @@
+from repro.train.step import build_train_step, make_train_state_specs
+
+__all__ = ["build_train_step", "make_train_state_specs"]

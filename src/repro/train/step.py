@@ -1,0 +1,71 @@
+"""Train-step builder: loss -> grads -> clip -> optimizer, with optional
+microbatch gradient accumulation (scan) and gradient compression hooks.
+
+The returned step is a pure function
+    (state, batch) -> (state, metrics)
+suitable for jit with in/out shardings (the dry-run lowers exactly this).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import loss_fn
+from repro.optim.clip import clip_by_global_norm
+
+
+def make_train_state(params, optimizer):
+    return {"params": params, "opt": optimizer.init(params)}
+
+
+def make_train_state_specs(cfg, optimizer, key=None):
+    """Abstract TrainState via eval_shape (no allocation)."""
+    from repro.models.api import init_model
+
+    key = jax.random.PRNGKey(0) if key is None else key
+    params = jax.eval_shape(lambda k: init_model(k, cfg), key)
+    opt = jax.eval_shape(optimizer.init, params)
+    return {"params": params, "opt": opt}
+
+
+def build_train_step(cfg, optimizer, *, microbatches: int = 1,
+                     clip_norm: float = 1.0, moe_impl: str = "scatter",
+                     grad_transform=None):
+    """grad_transform: optional fn(grads) -> grads (e.g. compression)."""
+
+    def loss(params, batch):
+        return loss_fn(params, batch, cfg, moe_impl=moe_impl)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches == 1:
+            l, grads = jax.value_and_grad(loss)(params, batch)
+        else:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb_i):
+                l_acc, g_acc = carry
+                l_i, g_i = jax.value_and_grad(loss)(params, mb_i)
+                return (
+                    l_acc + l_i / microbatches,
+                    jax.tree.map(lambda a, g: a + g / microbatches, g_acc, g_i),
+                ), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (l, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros((), jnp.float32), zero_g), mb
+            )
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = optimizer.update(grads, state["opt"], params)
+        new_params = jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+        metrics = {"loss": l, "grad_norm": gnorm}
+        return {"params": new_params, "opt": opt_state}, metrics
+
+    return train_step

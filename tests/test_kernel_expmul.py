@@ -1,0 +1,159 @@
+"""ExpMul kernel: Pallas-vs-oracle sweeps and property tests."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.expmul.expmul import expmul_pallas
+from repro.kernels.expmul.ref import expmul_exact_ref, expmul_ref, _lhat_ref
+from repro.numerics.log2exp import (
+    CLIP_LO,
+    expmul as expmul_jnp,
+    expmul_ste,
+    log2exp_lhat,
+    pow2_neg,
+)
+
+SHAPES = [(1, 1), (3, 7), (8, 16), (32, 64), (128, 256), (257, 130), (64, 1024)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(key, shape, dtype, scale=10.0):
+    v = jax.random.normal(key, shape, jnp.float32) * scale
+    return v.astype(dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pallas_matches_oracle_sweep(shape, dtype):
+    rows, d = shape
+    kx, kv = jax.random.split(jax.random.PRNGKey(hash(shape) % 2**31))
+    x = -jax.random.uniform(kx, (rows,), jnp.float32, 0.0, 20.0)  # includes clip zone
+    v = _rand(kv, shape, dtype)
+    got = expmul_pallas(x, v)
+    want = expmul_ref(x[:, None], v)
+    assert got.dtype == dtype
+    np.testing.assert_array_equal(np.asarray(got, np.float32), np.asarray(want, np.float32))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_jnp_bitpath_matches_oracle(dtype):
+    key = jax.random.PRNGKey(0)
+    kx, kv = jax.random.split(key)
+    x = -jax.random.uniform(kx, (512, 1), jnp.float32, 0.0, 30.0)
+    v = _rand(kv, (512, 64), dtype, scale=100.0)
+    np.testing.assert_array_equal(
+        np.asarray(expmul_jnp(x, v), np.float32),
+        np.asarray(expmul_ref(x, v), np.float32),
+    )
+
+
+def test_x_zero_is_identity():
+    v = _rand(jax.random.PRNGKey(1), (16, 16), jnp.float32)
+    out = expmul_pallas(jnp.zeros((16,)), v)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(v))
+
+
+def test_clip_region_scales_by_2_pow_22():
+    # x << -15 clips to -15 -> L = round(15*1.4375) = round(21.5625) = 22
+    v = jnp.full((4, 8), 3.0, jnp.float32)
+    out = expmul_pallas(jnp.full((4,), -1e6), v)
+    np.testing.assert_allclose(np.asarray(out), 3.0 * 2.0**-22, rtol=0)
+
+
+def test_zero_v_stays_zero_and_denormals_flush():
+    x = jnp.array([-0.5, -3.0])
+    v = jnp.array([[0.0, 1e-40], [0.0, -1e-39]], jnp.float32)  # denormals
+    out = expmul_pallas(x, v)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((2, 2), np.float32))
+
+
+def test_quantization_error_bound():
+    """|log2(expmul / exact)| <= 0.5 (rounding) + |x|*(log2e-1.4375) + fix-pt eps."""
+    x = jnp.linspace(-15.0, 0.0, 4001)
+    v = jnp.ones_like(x)[:, None]
+    q = np.asarray(expmul_jnp(x[:, None], v))[:, 0]
+    exact = np.exp(np.asarray(x))
+    ratio_log2 = np.log2(q / exact)
+    bound = 0.5 + np.abs(np.asarray(x)) * (math.log2(math.e) - 1.4375) + 2e-3
+    assert np.all(np.abs(ratio_log2) <= bound + 1e-6)
+
+
+def test_output_is_power_of_two_times_v():
+    """out = v * 2^{-L}: mantissa bits preserved when no flush."""
+    kx, kv = jax.random.split(jax.random.PRNGKey(7))
+    x = -jax.random.uniform(kx, (256,), jnp.float32, 0.0, 15.0)
+    v = _rand(kv, (256, 32), jnp.float32)
+    out = np.asarray(expmul_pallas(x, v))
+    vb = np.asarray(v).view(np.uint32)
+    ob = out.view(np.uint32)
+    nonzero = ob != 0
+    # mantissa (low 23 bits) and sign (bit 31) identical where not flushed
+    assert np.all((vb & 0x807FFFFF)[nonzero] == (ob & 0x807FFFFF)[nonzero])
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    x=st.floats(min_value=-60.0, max_value=0.0),
+    v=st.floats(min_value=-8e24, max_value=8e24).filter(
+        lambda t: t == 0.0 or abs(t) > 1e-35
+    ),
+)
+def test_property_scalar_matches_oracle(x, v):
+    xa = jnp.array([x], jnp.float32)
+    va = jnp.array([[v]], jnp.float32)
+    got = np.asarray(expmul_jnp(xa[:, None], va))
+    want = np.asarray(expmul_ref(xa[:, None], va))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    x1=st.floats(min_value=-14.9, max_value=-0.1),
+    dx=st.floats(min_value=0.01, max_value=5.0),
+)
+def test_property_lhat_monotone(x1, dx):
+    """More negative x -> larger or equal L_hat (e^x smaller)."""
+    l1 = int(log2exp_lhat(jnp.array(x1)))
+    l2 = int(log2exp_lhat(jnp.array(max(x1 - dx, -15.0))))
+    assert l2 >= l1
+
+
+@settings(max_examples=100, deadline=None)
+@given(x=st.floats(min_value=-15.0, max_value=0.0))
+def test_property_pow2_neg_consistent(x):
+    """pow2_neg(L) * v == apply_pow2_scale(v, L) for normal v."""
+    l = log2exp_lhat(jnp.array(x))
+    p = float(pow2_neg(l))
+    v = jnp.array([[1.5]], jnp.float32)
+    direct = float(expmul_jnp(jnp.array([[x]]), v)[0, 0])
+    assert p * 1.5 == direct
+
+
+def test_ste_gradients_are_exact_exp():
+    x = jnp.array([-1.3])
+    v = jnp.array([[2.0, -3.0]])
+    gx, gv = jax.grad(lambda x, v: jnp.sum(expmul_ste(x[:, None], v)), argnums=(0, 1))(x, v)
+    e = math.exp(-1.3)
+    np.testing.assert_allclose(np.asarray(gv), e * np.ones((1, 2)), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(gx), [e * (2.0 - 3.0)], rtol=1e-6)
+
+
+def test_relative_softmax_consistency():
+    """Numerator and denominator quantize with the same weights: the
+    normalized attention row built from ExpMul weights sums to exactly 1."""
+    key = jax.random.PRNGKey(3)
+    s = jax.random.normal(key, (64,), jnp.float32) * 4.0
+    m = jnp.max(s)
+    w = np.asarray(expmul_jnp((s - m)[:, None], jnp.ones((64, 1), jnp.float32)))[:, 0]
+    p = w / w.sum()
+    assert abs(p.sum() - 1.0) < 1e-6
+
+
+def test_lhat_ref_range():
+    x = jnp.linspace(-100, 0, 997)
+    l = np.asarray(_lhat_ref(x))
+    assert l.min() >= 0 and l.max() <= 22

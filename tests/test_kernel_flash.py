@@ -1,0 +1,160 @@
+"""FlashAttention-2 Pallas kernel vs oracles: shape/dtype sweeps, GQA,
+causal/window masking, padding tails, and ExpMul bit-exactness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attention import attention, attention_ref as core_ref, flash_jnp
+from repro.kernels.flash.ops import flash_attention_fwd
+from repro.kernels.flash.ref import attention_ref, flash2_alg4_ref, flash2_blocked_ref
+
+
+def _mk(key, B, H, Hkv, Sq, Sk, D, dtype):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, H, Sq, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (B, Hkv, Sk, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv, (B, Hkv, Sk, D), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+def _oracle(fn, q, k, v, **kw):
+    B, H = q.shape[:2]
+    Hkv = k.shape[1]
+    g = H // Hkv
+    return jnp.stack([
+        jnp.stack([fn(q[b, h], k[b, h // g], v[b, h // g], **kw) for h in range(H)])
+        for b in range(B)
+    ])
+
+
+CASES = [
+    # B, H, Hkv, Sq, Sk, D, bq, bk, causal
+    (1, 1, 1, 64, 64, 16, 32, 32, False),
+    (1, 2, 1, 128, 128, 64, 64, 64, True),
+    (2, 4, 2, 128, 256, 64, 64, 128, True),
+    (1, 8, 8, 256, 256, 128, 128, 128, True),
+    (1, 2, 2, 130, 190, 32, 64, 64, False),   # non-multiple tails
+    (1, 4, 1, 96, 96, 256, 32, 32, True),     # MQA + paper's largest d
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_exact_kernel_vs_reference(case, dtype):
+    B, H, Hkv, Sq, Sk, D, bq, bk, causal = case
+    q, k, v = _mk(jax.random.PRNGKey(sum(case)), B, H, Hkv, Sq, Sk, D, dtype)
+    got = flash_attention_fwd(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    want = _oracle(attention_ref, q, k, v, causal=causal)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_expmul_kernel_bitexact_vs_blocked_oracle(case):
+    B, H, Hkv, Sq, Sk, D, bq, bk, causal = case
+    q, k, v = _mk(jax.random.PRNGKey(sum(case) + 1), B, H, Hkv, Sq, Sk, D, jnp.float32)
+    got = flash_attention_fwd(q, k, v, causal=causal, variant="expmul",
+                              block_q=bq, block_k=bk)
+    want = _oracle(flash2_blocked_ref, q, k, v, causal=causal, variant="expmul",
+                   block_q=bq, block_k=bk)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_expmul_error_vs_exact_bounded():
+    q, k, v = _mk(jax.random.PRNGKey(5), 2, 4, 4, 256, 256, 64, jnp.float32)
+    exact = flash_attention_fwd(q, k, v, causal=True)
+    qz = flash_attention_fwd(q, k, v, causal=True, variant="expmul")
+    err = np.abs(np.asarray(exact - qz))
+    assert err.max() < 0.6 and err.mean() < 0.05
+
+
+def test_alg4_perkey_close_to_blocked():
+    """The literal per-key paper recurrence and the TPU block schedule agree
+    to within quantization noise."""
+    q, k, v = _mk(jax.random.PRNGKey(9), 1, 2, 2, 128, 128, 32, jnp.float32)
+    blocked = _oracle(flash2_blocked_ref, q, k, v, causal=True, variant="expmul",
+                      block_q=64, block_k=64)
+    perkey = _oracle(flash2_alg4_ref, q, k, v, causal=True, variant="expmul")
+    exact = _oracle(attention_ref, q, k, v, causal=True)
+    for o in (blocked, perkey):
+        assert np.abs(np.asarray(o - exact)).mean() < 0.05
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_local_window_masking(window):
+    q, k, v = _mk(jax.random.PRNGKey(3), 1, 2, 2, 128, 128, 32, jnp.float32)
+    got = flash_attention_fwd(q, k, v, causal=True, window=window,
+                              block_q=32, block_k=32)
+    want = _oracle(attention_ref, q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-6, rtol=2e-6)
+
+
+def test_causal_suffix_independence():
+    """Causal output at position i must not depend on keys/values > i."""
+    q, k, v = _mk(jax.random.PRNGKey(11), 1, 2, 2, 64, 64, 32, jnp.float32)
+    out1 = flash_attention_fwd(q, k, v, causal=True, block_q=32, block_k=32)
+    k2 = k.at[:, :, 48:].set(jax.random.normal(jax.random.PRNGKey(12), k[:, :, 48:].shape))
+    v2 = v.at[:, :, 48:].set(jax.random.normal(jax.random.PRNGKey(13), v[:, :, 48:].shape))
+    out2 = flash_attention_fwd(q, k2, v2, causal=True, block_q=32, block_k=32)
+    np.testing.assert_array_equal(np.asarray(out1[:, :, :48]), np.asarray(out2[:, :, :48]))
+
+
+@pytest.mark.parametrize("variant", ["exact", "expmul"])
+def test_constant_value_invariance(variant):
+    """If all value rows are the same vector c, output == c for any weights
+    (normalization property holds under quantization too)."""
+    key = jax.random.PRNGKey(21)
+    q, k, _ = _mk(key, 1, 2, 2, 64, 64, 32, jnp.float32)
+    c = jax.random.normal(jax.random.PRNGKey(22), (32,), jnp.float32)
+    v = jnp.broadcast_to(c, (1, 2, 64, 32))
+    out = flash_attention_fwd(q, k, v, causal=True, variant=variant)
+    np.testing.assert_allclose(
+        np.asarray(out), np.broadcast_to(np.asarray(c), out.shape), rtol=2e-5, atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("variant", ["exact", "expmul"])
+def test_flash_jnp_matches_kernel_family(variant):
+    """The XLA-path flash_jnp agrees with ground truth (exact) / stays within
+    quantization tolerance of the kernel (expmul)."""
+    q, k, v = _mk(jax.random.PRNGKey(31), 2, 4, 2, 128, 128, 64, jnp.float32)
+    got = flash_jnp(q, k, v, causal=True, variant=variant, block_k=64)
+    if variant == "exact":
+        want = _oracle(attention_ref, q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-6, rtol=2e-6)
+    else:
+        kern = flash_attention_fwd(q, k, v, causal=True, variant="expmul",
+                                   block_q=128, block_k=64)
+        assert np.abs(np.asarray(got - kern)).max() < 0.3
+
+
+def test_pallas_custom_vjp_grads_close_to_ref():
+    q, k, v = _mk(jax.random.PRNGKey(41), 1, 2, 1, 64, 64, 32, jnp.float32)
+
+    def loss_pallas(q, k, v):
+        return jnp.sum(attention(q, k, v, impl="pallas", causal=True,
+                                 block_q=32, block_k=32) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(core_ref(q, k, v, causal=True) ** 2)
+
+    g1 = jax.grad(loss_pallas, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-4)
+
+
+def test_flash_jnp_expmul_ste_grads_finite():
+    q, k, v = _mk(jax.random.PRNGKey(43), 1, 2, 2, 64, 64, 32, jnp.float32)
+
+    def loss(q, k, v):
+        return jnp.sum(flash_jnp(q, k, v, causal=True, variant="expmul",
+                                 use_ste=True, block_k=32) ** 2)
+
+    grads = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    for g in grads:
+        assert np.all(np.isfinite(np.asarray(g)))
+        assert np.abs(np.asarray(g)).max() > 0
