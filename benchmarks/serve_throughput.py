@@ -1,0 +1,116 @@
+"""Serving-path throughput: chunked prefill vs decode, exact vs ExpMul.
+
+Drives real requests through ``ServeEngine`` (CPU software proxy — the TPU
+target's win is VPU op count) and measures:
+
+  * prefill tokens/sec — prompt tokens absorbed by the chunked-prefill graph
+  * decode tokens/sec  — sampled tokens from the single-token graph
+  * first-token engine steps vs the legacy teacher-forced path
+
+Emits ``BENCH_serve.json`` next to this file so the perf trajectory of the
+serving path is tracked across PRs.
+
+  PYTHONPATH=src python benchmarks/serve_throughput.py [--arch qwen2-0.5b]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.api import init_model
+from repro.serve.engine import ServeEngine
+
+
+def bench_variant(params, cfg0, variant, *, slots, prompt_len, max_new,
+                  chunk, max_len):
+    cfg = cfg0.replace(attention_variant=variant)
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(1, cfg.vocab_size, size=prompt_len))
+               for _ in range(slots)]
+
+    # warmup: compile both graphs on a throwaway engine
+    warm = ServeEngine(params, cfg, slots=slots, max_len=max_len,
+                       chunk_size=chunk)
+    for p in prompts:
+        warm.submit(p, 2)
+    warm.run()
+
+    eng = ServeEngine(params, cfg, slots=slots, max_len=max_len,
+                      chunk_size=chunk)
+    reqs = [eng.submit(p, max_new, rid=i) for i, p in enumerate(prompts)]
+
+    t0 = time.time()
+    while any(r.pos < len(r.prompt) for r in reqs):
+        eng.tick()
+    t_prefill = time.time() - t0
+    prefill_tokens = eng.prompt_tokens
+
+    t0 = time.time()
+    eng.run()
+    t_decode = time.time() - t0
+
+    assert all(r.done for r in reqs)
+    return {
+        "variant": variant,
+        "prefill_tokens": int(prefill_tokens),
+        "prefill_steps": int(eng.prefill_steps),
+        "decode_steps": int(eng.decode_steps),
+        "prefill_tok_per_s": prefill_tokens / max(t_prefill, 1e-9),
+        "decode_tok_per_s": eng.tokens_generated / max(t_decode, 1e-9),
+        "first_token_steps": max(r.first_token_step for r in reqs),
+        "legacy_first_token_steps": prompt_len,  # one tick per prompt token
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=256)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--chunk", type=int, default=64)
+    ap.add_argument("--max-len", type=int, default=384)
+    ap.add_argument("--out", default=str(
+        pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"))
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=True, dtype="float32",
+                     param_dtype="float32")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+
+    results = {
+        "bench": "serve_throughput",
+        "arch": args.arch,
+        "backend": jax.default_backend(),
+        "slots": args.slots,
+        "prompt_len": args.prompt_len,
+        "max_new": args.max_new,
+        "chunk": args.chunk,
+        "variants": [],
+    }
+    print(f"# serve_throughput {args.arch} slots={args.slots} "
+          f"prompt={args.prompt_len} chunk={args.chunk}")
+    for variant in ("exact", "expmul"):
+        r = bench_variant(params, cfg, variant, slots=args.slots,
+                          prompt_len=args.prompt_len, max_new=args.max_new,
+                          chunk=args.chunk, max_len=args.max_len)
+        results["variants"].append(r)
+        print(f"  {variant:7s}: prefill {r['prefill_tok_per_s']:9.1f} tok/s "
+              f"({r['prefill_steps']} steps), decode "
+              f"{r['decode_tok_per_s']:7.1f} tok/s, first token at step "
+              f"{r['first_token_steps']} (legacy: "
+              f"{r['legacy_first_token_steps']})")
+
+    pathlib.Path(args.out).write_text(json.dumps(results, indent=2) + "\n")
+    print(f"wrote {args.out}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,6 @@
-"""Batched serving example: continuous batching over a slot pool, comparing
-the exact and ExpMul attention variants on identical requests.
+"""Batched serving example: chunked prefill + continuous batching over a
+slot pool, comparing the exact and ExpMul attention variants on identical
+requests.
 
   PYTHONPATH=src python examples/serve_batch.py
 """
@@ -13,14 +14,14 @@ from repro.models.api import init_model
 from repro.serve.engine import ServeEngine
 
 
-def run(variant: str, params, cfg0, prompts, max_new=24):
+def run(variant: str, params, cfg0, prompts, max_new=24, chunk=16):
     cfg = cfg0.replace(attention_variant=variant)
-    eng = ServeEngine(params, cfg, slots=4, max_len=128)
+    eng = ServeEngine(params, cfg, slots=4, max_len=128, chunk_size=chunk)
     reqs = [eng.submit(p, max_new, rid=i) for i, p in enumerate(prompts)]
     t0 = time.time()
     eng.run()
     dt = time.time() - t0
-    return reqs, eng.tokens_generated / dt, eng.ticks
+    return reqs, eng.tokens_generated / dt, eng
 
 
 def main():
@@ -29,12 +30,15 @@ def main():
     params = init_model(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
     prompts = [list(rng.integers(1, cfg.vocab_size, size=n))
-               for n in rng.integers(4, 16, size=10)]
+               for n in rng.integers(24, 64, size=10)]
 
-    print("10 requests, 4 slots (continuous batching), greedy decode")
+    print("10 requests, 4 slots, chunked prefill (C=16) + continuous "
+          "batching, greedy decode")
     for variant in ("exact", "expmul"):
-        reqs, tps, ticks = run(variant, params, cfg, prompts)
-        print(f"  {variant:7s}: {ticks} ticks, {tps:7.1f} tok/s")
+        reqs, tps, eng = run(variant, params, cfg, prompts)
+        print(f"  {variant:7s}: {eng.ticks} steps (prefill "
+              f"{eng.prefill_steps} / decode {eng.decode_steps}), "
+              f"{tps:7.1f} tok/s")
         if variant == "exact":
             exact_outs = [tuple(r.out) for r in reqs]
         else:

@@ -67,11 +67,14 @@ class ModelConfig:
     frontend_tokens: int = 0
     frontend_dim: int = 0
 
-    # numerics / the paper's technique
+    # numerics / the paper's technique — consumed via AttentionSpec.from_config
     attention_impl: str = "flash_jnp"      # ref | flash_jnp | pallas
     attention_variant: str = "expmul"      # exact | expmul  (paper default on)
+    attention_block_q: int = 128
     attention_block_k: int = 512
     attention_q_chunks: int = 4            # causal block skipping (1 = off)
+    attention_decode_impl: str | None = None   # None: derived from impl
+    attention_prefill_impl: str | None = None  # None: masked_xla
     dtype: str = "bfloat16"
     param_dtype: str = "bfloat16"
     opt_state_dtype: str = "float32"       # bf16 for the 1T-class models

@@ -1,5 +1,12 @@
 # Core: the paper's contribution — ExpMul-fused FlashAttention-2 — exposed
-# as a composable attention module plus the decode path for serving.
-from repro.core.attention import attention, attention_ref, decode_attention, flash_jnp
+# as a composable attention module plus the prefill/decode paths for serving.
+from repro.core.attention import (
+    attention,
+    attention_ref,
+    decode_attention,
+    flash_jnp,
+    prefill_attention,
+)
 
-__all__ = ["attention", "attention_ref", "decode_attention", "flash_jnp"]
+__all__ = ["attention", "attention_ref", "decode_attention", "flash_jnp",
+           "prefill_attention"]

@@ -1,6 +1,13 @@
 """Core attention API — the paper's technique as a composable JAX module.
 
-One entry point, ``attention``, dispatches across implementations:
+Implementations register with the backend registry
+(``repro.kernels.registry``) under three calling conventions — full
+sequence, chunked prefill, and single-token decode — and layers dispatch
+through an ``AttentionSpec`` built from the model config (DESIGN.md §3).
+The keyword entry points ``attention``/``decode_attention`` below are thin
+wrappers kept for scripts and benchmarks.
+
+Full-sequence implementations:
 
   impl="ref"        full-softmax reference (small shapes, ground truth)
   impl="flash_jnp"  scan-blocked FlashAttention-2 in pure jnp/lax. This is
@@ -25,6 +32,14 @@ import numpy as np
 
 from repro.kernels.flash.ops import flash_attention_fwd
 from repro.kernels.decode.ops import decode_attention_pallas
+from repro.kernels.registry import (
+    AttentionSpec,
+    dispatch_attention,
+    dispatch_decode,
+    register_attention,
+    register_decode,
+    register_prefill,
+)
 from repro.numerics.log2exp import (
     apply_pow2_scale,
     log2exp_lhat,
@@ -65,7 +80,8 @@ def attention_ref(q, k, v, *, causal=True, scale=None, window=None,
         m = jnp.max(s, axis=-1, keepdims=True)
         p = _qexp(s - m, use_ste)
         p = jnp.where(mask, p, 0.0)
-        p = p / jnp.sum(p, axis=-1, keepdims=True)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        p = p / jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0, not NaN
     else:
         p = jax.nn.softmax(s, axis=-1)
         p = jnp.where(mask, p, 0.0)
@@ -250,7 +266,114 @@ def _pallas_attn_vjp(causal, scale, window, variant, block_q, block_k):
 
 
 # ---------------------------------------------------------------------------
-# Dispatch
+# Chunked-prefill attention (serving path)
+# ---------------------------------------------------------------------------
+def prefill_attention(q, k, v, *, q_positions, kv_positions, kv_valid,
+                      scale=None, window=None, variant="exact", use_ste=False):
+    """Masked attention for a prompt chunk against gathered KV.
+
+    q: (B, H, C, D) — C chunk queries per sequence; k/v: (B, Hkv, T, ·) —
+    typically the concatenation [cache ++ chunk]. Causality is positional:
+    query i attends KV j iff ``kv_valid[b, j]`` and ``kv_positions[b, j] <=
+    q_positions[b, i]`` (and inside ``window`` when set), which makes the
+    same code path exact for fresh caches, rolling (windowed) caches, and
+    partially-filled chunks (DESIGN.md §6).
+    """
+    B, H, C, D = q.shape
+    _, Hkv, T, _ = k.shape
+    group = H // Hkv
+    scale = float(1.0 / np.sqrt(D)) if scale is None else scale
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, C, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k.astype(jnp.float32)) * scale
+    delta = q_positions[:, :, None] - kv_positions[:, None, :]  # (B, C, T)
+    mask = kv_valid[:, None, :] & (delta >= 0)
+    if window is not None:
+        mask &= delta < window
+    mask = mask[:, None, None]  # broadcast over (Hkv, group)
+    s = jnp.where(mask, s, MASK_VALUE)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    if variant == "expmul":
+        p = _qexp(s - m, use_ste)
+    else:
+        p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p / jnp.where(l == 0.0, 1.0, l),
+                   v.astype(jnp.float32))
+    Dv = v.shape[-1]
+    return o.reshape(B, H, C, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Registry-backed dispatch (DESIGN.md §3)
+# ---------------------------------------------------------------------------
+@register_attention("ref")
+def _attention_ref_impl(q, k, v, *, spec, causal, scale):
+    return attention_ref(q, k, v, causal=causal, scale=scale,
+                         window=spec.window, variant=spec.variant,
+                         use_ste=spec.use_ste)
+
+
+@register_attention("flash_jnp")
+def _flash_jnp_impl(q, k, v, *, spec, causal, scale):
+    return flash_jnp(q, k, v, causal=causal, scale=scale, window=spec.window,
+                     variant=spec.variant, use_ste=spec.use_ste,
+                     block_k=spec.block_k, remat=spec.remat,
+                     causal_q_chunks=spec.q_chunks)
+
+
+@register_attention("pallas")
+def _pallas_impl(q, k, v, *, spec, causal, scale):
+    if scale is None:
+        scale = float(1.0 / np.sqrt(q.shape[-1]))
+    fn = _pallas_attn_vjp(causal, scale, spec.window, spec.variant,
+                          min(spec.block_q, q.shape[2]),
+                          min(spec.block_k, k.shape[2]))
+    return fn(q, k, v)
+
+
+@register_prefill("masked_xla")
+def _prefill_masked_xla(q, k, v, *, spec, scale, q_positions, kv_positions,
+                        kv_valid):
+    return prefill_attention(q, k, v, q_positions=q_positions,
+                             kv_positions=kv_positions, kv_valid=kv_valid,
+                             scale=scale, window=spec.window,
+                             variant=spec.variant, use_ste=spec.use_ste)
+
+
+@register_decode("xla")
+def _decode_xla(q, k_cache, v_cache, lengths, *, spec, scale):
+    B, H, D = q.shape
+    _, Hkv, S, _ = k_cache.shape
+    group = H // Hkv
+    scale = float(1.0 / np.sqrt(D)) if scale is None else scale
+    qf = q.astype(jnp.float32).reshape(B, Hkv, group, D)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qf, k_cache.astype(jnp.float32)) * scale
+    mask = (jnp.arange(S)[None, :] < lengths[:, None])[:, None, None, :]
+    s = jnp.where(mask, s, MASK_VALUE)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    if spec.variant == "expmul":
+        p = pow2_neg(log2exp_lhat(s - m), jnp.float32)
+    else:
+        p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p / jnp.where(l == 0, 1, l),
+                   v_cache.astype(jnp.float32))
+    Dv = v_cache.shape[-1]  # MLA: value head dim can differ from qk dim
+    return o.reshape(B, H, Dv).astype(q.dtype)
+
+
+@register_decode("pallas")
+def _decode_pallas(q, k_cache, v_cache, lengths, *, spec, scale):
+    return decode_attention_pallas(
+        q, k_cache, v_cache, lengths, scale=scale, variant=spec.variant,
+        block_k=spec.decode_block_k,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Back-compat keyword entry points (thin wrappers over the registry)
 # ---------------------------------------------------------------------------
 def attention(
     q, k, v, *,
@@ -269,20 +392,10 @@ def attention(
 
     q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D) with H % Hkv == 0.
     """
-    if scale is None:
-        scale = float(1.0 / np.sqrt(q.shape[-1]))
-    if impl == "ref":
-        return attention_ref(q, k, v, causal=causal, scale=scale, window=window,
-                             variant=variant, use_ste=use_ste)
-    if impl == "flash_jnp":
-        return flash_jnp(q, k, v, causal=causal, scale=scale, window=window,
-                         variant=variant, use_ste=use_ste, block_k=block_k,
-                         remat=remat, causal_q_chunks=q_chunks)
-    if impl == "pallas":
-        fn = _pallas_attn_vjp(causal, scale, window, variant,
-                              min(block_q, q.shape[2]), min(block_k, k.shape[2]))
-        return fn(q, k, v)
-    raise ValueError(f"unknown attention impl {impl!r}")
+    spec = AttentionSpec(impl=impl, variant=variant, use_ste=use_ste,
+                         window=window, block_q=block_q, block_k=block_k,
+                         remat=remat, q_chunks=q_chunks)
+    return dispatch_attention(spec, q, k, v, causal=causal, scale=scale)
 
 
 def decode_attention(
@@ -296,27 +409,6 @@ def decode_attention(
 
     q: (B, H, D); caches: (B, Hkv, S, D); lengths: (B,) valid entries.
     """
-    B, H, D = q.shape
-    _, Hkv, S, _ = k_cache.shape
-    group = H // Hkv
-    scale = float(1.0 / np.sqrt(D)) if scale is None else scale
-    if impl == "pallas":
-        return decode_attention_pallas(
-            q, k_cache, v_cache, lengths, scale=scale, variant=variant,
-            block_k=block_k,
-        )
-    qf = q.astype(jnp.float32).reshape(B, Hkv, group, D)
-    s = jnp.einsum("bhgd,bhkd->bhgk", qf, k_cache.astype(jnp.float32)) * scale
-    mask = (jnp.arange(S)[None, :] < lengths[:, None])[:, None, None, :]
-    s = jnp.where(mask, s, MASK_VALUE)
-    m = jnp.max(s, axis=-1, keepdims=True)
-    if variant == "expmul":
-        p = pow2_neg(log2exp_lhat(s - m), jnp.float32)
-    else:
-        p = jnp.exp(s - m)
-    p = jnp.where(mask, p, 0.0)
-    l = jnp.sum(p, axis=-1, keepdims=True)
-    o = jnp.einsum("bhgk,bhkd->bhgd", p / jnp.where(l == 0, 1, l),
-                   v_cache.astype(jnp.float32))
-    Dv = v_cache.shape[-1]  # MLA: value head dim can differ from qk dim
-    return o.reshape(B, H, Dv).astype(q.dtype)
+    spec = AttentionSpec(decode_impl=impl, variant=variant,
+                         decode_block_k=block_k)
+    return dispatch_decode(spec, q, k_cache, v_cache, lengths, scale=scale)

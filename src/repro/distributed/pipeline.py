@@ -15,6 +15,20 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+try:  # jax >= 0.6
+    shard_map = jax.shard_map
+except AttributeError:  # jax 0.4.x: no rep-varying tracking — disable the
+    # replication checker instead of pcast-marking the carries
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    shard_map = functools.partial(_shard_map_legacy, check_rep=False)
+
+
+def _pcast_varying(x, axis):
+    """Mark x device-varying over axis (no-op on jax without lax.pcast)."""
+    pcast = getattr(jax.lax, "pcast", None)
+    return pcast(x, (axis,), to="varying") if pcast else x
+
 
 def pipeline_forward(stage_fn, params_stacked, x_microbatches, mesh, *,
                      axis: str = "pp"):
@@ -38,8 +52,8 @@ def pipeline_forward(stage_fn, params_stacked, x_microbatches, mesh, *,
         buf = jnp.zeros_like(xs_local[0])
         outs = jnp.zeros((n_micro,) + xs_local.shape[1:], xs_local.dtype)
         # carries become device-varying over the pp axis inside the loop
-        buf = jax.lax.pcast(buf, (axis,), to="varying")
-        outs = jax.lax.pcast(outs, (axis,), to="varying")
+        buf = _pcast_varying(buf, axis)
+        outs = _pcast_varying(outs, axis)
 
         def tick(carry, t):
             buf, outs = carry
@@ -72,7 +86,7 @@ def pipeline_forward(stage_fn, params_stacked, x_microbatches, mesh, *,
         )
         return outs
 
-    fn = jax.shard_map(
+    fn = shard_map(
         per_stage,
         mesh=mesh,
         in_specs=(P(axis), P()),

@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Custom-kernel layer. registry.py is the attention backend dispatch table
+# every attention call routes through (DESIGN.md §3); the subpackages
+# (flash, decode, expmul) hold <name>.py + ops.py + ref.py for the compute
+# hot-spots the paper itself optimizes with a custom kernel.

@@ -1,0 +1,151 @@
+"""Unified attention backend registry (DESIGN.md §3).
+
+One ``AttentionSpec`` describes *how* attention is computed — implementation,
+arithmetic variant (exact vs the paper's ExpMul), block sizes, local window —
+independently of *where* it is called from: full-sequence train/forward,
+chunked prefill, or single-token KV-cache decode. The three call sites
+(``core/attention.py``, ``layers/attention_layer.py``, ``layers/mla.py``)
+all route through the dispatch tables below instead of carrying their own
+string-dispatch, so config-driven impl/variant selection behaves identically
+in train, serve, and bench.
+
+Three tables, one per calling convention:
+
+  full sequence   fn(q, k, v, *, spec, causal, scale)       -> (B, H, Sq, Dv)
+  chunked prefill fn(q, k, v, *, spec, scale,
+                     q_positions, kv_positions, kv_valid)   -> (B, H, C, Dv)
+  decode          fn(q, k_cache, v_cache, lengths,
+                     *, spec, scale)                        -> (B, H, Dv)
+
+Built-in implementations live in ``repro.core.attention`` and register
+themselves on import; new backends (e.g. a Pallas prefill kernel) register
+under a new name and become selectable purely through the model config.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    """Everything attention dispatch needs beyond the operands.
+
+    ``impl`` names the full-sequence kernel; ``decode_impl`` and
+    ``prefill_impl`` default (None) to the natural companion of ``impl``
+    so a config only has to pick one backend family.
+    """
+
+    impl: str = "flash_jnp"          # ref | flash_jnp | pallas | ...
+    decode_impl: str | None = None   # xla | pallas | ...
+    prefill_impl: str | None = None  # masked_xla | ...
+    variant: str = "exact"           # exact | expmul
+    use_ste: bool = False            # straight-through grads for expmul
+    window: int | None = None        # local attention span
+    block_q: int = 128
+    block_k: int = 512
+    decode_block_k: int = 256
+    q_chunks: int = 4                # causal block skipping (flash_jnp)
+    remat: bool = True
+
+    def resolved_decode_impl(self) -> str:
+        if self.decode_impl is not None:
+            return self.decode_impl
+        return "pallas" if self.impl == "pallas" else "xla"
+
+    def resolved_prefill_impl(self) -> str:
+        return self.prefill_impl or "masked_xla"
+
+    @classmethod
+    def from_config(cls, cfg, *, window=None, variant=None,
+                    use_ste=False) -> "AttentionSpec":
+        """Build a spec from a ModelConfig (the single cfg->kernel mapping)."""
+        return cls(
+            impl=cfg.attention_impl,
+            decode_impl=cfg.attention_decode_impl,
+            prefill_impl=cfg.attention_prefill_impl,
+            variant=variant if variant is not None else cfg.attention_variant,
+            use_ste=use_ste,
+            window=window,
+            block_q=cfg.attention_block_q,
+            block_k=cfg.attention_block_k,
+            q_chunks=cfg.attention_q_chunks,
+            remat=cfg.remat,
+        )
+
+    def replace(self, **kw) -> "AttentionSpec":
+        return dataclasses.replace(self, **kw)
+
+
+_ATTENTION_IMPLS: dict[str, object] = {}
+_PREFILL_IMPLS: dict[str, object] = {}
+_DECODE_IMPLS: dict[str, object] = {}
+
+
+def register_attention(name: str):
+    def deco(fn):
+        _ATTENTION_IMPLS[name] = fn
+        return fn
+    return deco
+
+
+def register_prefill(name: str):
+    def deco(fn):
+        _PREFILL_IMPLS[name] = fn
+        return fn
+    return deco
+
+
+def register_decode(name: str):
+    def deco(fn):
+        _DECODE_IMPLS[name] = fn
+        return fn
+    return deco
+
+
+def _lookup(table, name, kind):
+    if name not in table:
+        # built-ins register on import of the core module; importing lazily
+        # here breaks the registry <-> core circular dependency
+        import repro.core.attention  # noqa: F401
+    try:
+        return table[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown {kind} attention impl {name!r}; "
+            f"registered: {sorted(table)}"
+        ) from None
+
+
+def attention_impls() -> tuple[str, ...]:
+    _lookup(_ATTENTION_IMPLS, "ref", "full-sequence")
+    return tuple(sorted(_ATTENTION_IMPLS))
+
+
+def dispatch_attention(spec: AttentionSpec, q, k, v, *, causal=True,
+                       scale=None):
+    """Full-sequence attention. q: (B,H,Sq,D); k/v: (B,Hkv,Sk,·)."""
+    fn = _lookup(_ATTENTION_IMPLS, spec.impl, "full-sequence")
+    return fn(q, k, v, spec=spec, causal=causal, scale=scale)
+
+
+def dispatch_prefill(spec: AttentionSpec, q, k, v, *, q_positions,
+                     kv_positions, kv_valid, scale=None):
+    """Chunked-prefill attention against gathered KV (cache ++ chunk).
+
+    q: (B, H, C, D) chunk queries; k/v: (B, Hkv, T, ·);
+    q_positions: (B, C) absolute token positions of the chunk;
+    kv_positions: (B, T) absolute positions of each KV entry;
+    kv_valid: (B, T) bool — False rows are masked out entirely.
+    Causality is positional: query i sees KV j iff kv_positions[b, j] <=
+    q_positions[b, i] (and within ``spec.window`` when set).
+    """
+    fn = _lookup(_PREFILL_IMPLS, spec.resolved_prefill_impl(), "prefill")
+    return fn(q, k, v, spec=spec, scale=scale, q_positions=q_positions,
+              kv_positions=kv_positions, kv_valid=kv_valid)
+
+
+def dispatch_decode(spec: AttentionSpec, q, k_cache, v_cache, lengths, *,
+                    scale=None):
+    """Single-token decode. q: (B,H,D); caches: (B,Hkv,S,·); lengths: (B,)."""
+    fn = _lookup(_DECODE_IMPLS, spec.resolved_decode_impl(), "decode")
+    return fn(q, k_cache, v_cache, lengths, spec=spec, scale=scale)

@@ -157,11 +157,16 @@ class HloCost:
         if not m:
             return 0.0
         r_elems, _ = _shape_elems_bytes(m.group("rshape"))
-        args = [a.strip().lstrip("%") for a in m.group("args").split(",")]
+        argstr = m.group("args")
         cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
         k = 1
-        if args and cdims and cdims.group(1):
-            lhs_shape = self.op_shapes.get(args[0])
+        if cdims and cdims.group(1):
+            # post-opt HLO prints operand shapes inline at the call site
+            # ("dot(f32[128,128]{1,0} %op, ...)"); fall back to the defs map
+            # for the older name-only format
+            sm = _SHAPE_ITER.search(argstr)
+            lhs_shape = sm.group(0) if sm else self.op_shapes.get(
+                argstr.split(",")[0].strip().lstrip("%"))
             if lhs_shape:
                 dims_m = _SHAPE_ITER.search(lhs_shape)
                 if dims_m and dims_m.group(2):

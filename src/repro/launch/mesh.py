@@ -19,3 +19,13 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(n_data: int = 4, n_model: int = 2):
     """Small mesh for tests running with a handful of fake devices."""
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def set_mesh(mesh):
+    """Version-portable ``with set_mesh(mesh):``.
+
+    jax >= 0.6 has ``jax.set_mesh``; on older releases the Mesh object is
+    itself a context manager, which is all the callers here need
+    (PartitionSpec axis-name resolution inside the block).
+    """
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh

@@ -1,7 +1,7 @@
-"""Serving launcher: batched decode with continuous batching.
+"""Serving launcher: chunked prefill + continuous decode batching.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
-      --requests 8 --max-new 32 [--variant expmul]
+      --requests 8 --max-new 32 --chunk 32 [--variant expmul]
 """
 from __future__ import annotations
 
@@ -24,6 +24,10 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--chunk", type=int, default=32,
+                    help="prefill chunk size (1 = legacy teacher-forcing)")
+    ap.add_argument("--prompt-len", type=int, default=0,
+                    help="fixed prompt length (0 = random 4..11)")
     ap.add_argument("--variant", default="expmul", choices=["exact", "expmul"])
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args(argv)
@@ -32,18 +36,22 @@ def main(argv=None):
                      param_dtype="float32", attention_variant=args.variant)
     params = init_model(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(params, cfg, slots=args.slots, max_len=args.max_len,
-                      temperature=args.temperature)
+                      chunk_size=args.chunk, temperature=args.temperature)
     rng = np.random.default_rng(0)
     reqs = [
-        eng.submit(list(rng.integers(1, cfg.vocab_size, size=rng.integers(4, 12))),
-                   args.max_new, rid=i)
+        eng.submit(
+            list(rng.integers(
+                1, cfg.vocab_size,
+                size=args.prompt_len or rng.integers(4, 12))),
+            args.max_new, rid=i)
         for i in range(args.requests)
     ]
     t0 = time.time()
     eng.run()
     dt = time.time() - t0
-    print(f"variant={args.variant} requests={len(reqs)} ticks={eng.ticks} "
-          f"generated={eng.tokens_generated} tokens "
+    print(f"variant={args.variant} requests={len(reqs)} chunk={args.chunk} "
+          f"steps={eng.ticks} (prefill {eng.prefill_steps} / decode "
+          f"{eng.decode_steps}) generated={eng.tokens_generated} tokens "
           f"({eng.tokens_generated / dt:.1f} tok/s)")
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt[:4]={r.prompt[:4]} -> out[:8]={r.out[:8]}")

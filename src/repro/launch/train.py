@@ -16,6 +16,8 @@ import logging
 import time
 
 import jax
+
+from repro.launch.mesh import set_mesh
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -90,7 +92,7 @@ def main(argv=None, cfg_override=None):
         grad_transform=grad_transform if args.compress_grads else None,
     )
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         state_shapes = make_train_state_specs(cfg, opt)
         st_sh = state_shardings(state_shapes, mesh)
         jit_step = jax.jit(step_fn_inner, donate_argnums=(0,))

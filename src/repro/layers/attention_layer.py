@@ -1,13 +1,20 @@
 """Standard GQA/MQA/MHA attention layer with RoPE, optional QKV bias and
-local windows. Both full-sequence (train/prefill) and single-token decode
-(KV cache) paths route through ``repro.core.attention`` — i.e. through the
-paper's exact/ExpMul kernel selection."""
+local windows. Full-sequence (train), chunked-prefill, and single-token
+decode (KV cache) paths all route through the attention backend registry
+(``repro.kernels.registry``) — i.e. through the paper's exact/ExpMul kernel
+selection, driven entirely by the model config."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.attention import attention, decode_attention
+import repro.core.attention  # noqa: F401 — registers the built-in backends
+from repro.kernels.registry import (
+    AttentionSpec,
+    dispatch_attention,
+    dispatch_decode,
+    dispatch_prefill,
+)
 from repro.layers.common import dense_init
 from repro.layers.rotary import apply_rope
 
@@ -48,15 +55,8 @@ def attn_apply(params, x, cfg, *, positions=None, causal=True, window=None):
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
     q, k, v = _project_qkv(params, x, cfg, positions)
-    o = attention(
-        q, k, v,
-        causal=causal,
-        window=window,
-        impl=cfg.attention_impl,
-        variant=cfg.attention_variant,
-        block_k=cfg.attention_block_k,
-        remat=cfg.remat,
-        q_chunks=cfg.attention_q_chunks,
+    o = dispatch_attention(
+        AttentionSpec.from_config(cfg, window=window), q, k, v, causal=causal,
     )
     return jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
 
@@ -83,14 +83,8 @@ def cross_attn_kv(params, enc_out):
 def cross_attn_apply(params, x, enc_out, cfg, *, kv=None):
     q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
     k, v = cross_attn_kv(params, enc_out) if kv is None else kv
-    o = attention(
-        q, k, v,
-        causal=False,
-        impl=cfg.attention_impl,
-        variant=cfg.attention_variant,
-        block_k=cfg.attention_block_k,
-        remat=cfg.remat,
-        q_chunks=cfg.attention_q_chunks,
+    o = dispatch_attention(
+        AttentionSpec.from_config(cfg), q, k, v, causal=False,
     )
     return jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
 
@@ -99,11 +93,9 @@ def cross_attn_decode(params, x1, kv, enc_len, cfg):
     """x1: (B, D); kv: precomputed (k, v) from the encoder output."""
     q = jnp.einsum("bd,dhk->bhk", x1, params["wq"])
     k, v = kv
-    o = decode_attention(
-        q, k, v, enc_len,
-        impl="xla",
-        variant=cfg.attention_variant,
-    )
+    # cross K/V are not a padded ring-buffer cache: force the xla decode path
+    spec = AttentionSpec.from_config(cfg).replace(decode_impl="xla")
+    o = dispatch_decode(spec, q, k, v, enc_len)
     return jnp.einsum("bhk,hkd->bd", o, params["wo"])
 
 
@@ -144,10 +136,80 @@ def attn_decode_step(params, cache, x1, cfg, lengths, *, write_pos=None,
 
     k_cache = upd(cache["k"], k, write_pos)
     v_cache = upd(cache["v"], v, write_pos)
-    o = decode_attention(
-        q, k_cache, v_cache, attn_len,
-        impl="pallas" if cfg.attention_impl == "pallas" else "xla",
-        variant=cfg.attention_variant,
+    o = dispatch_decode(
+        AttentionSpec.from_config(cfg), q, k_cache, v_cache, attn_len,
     )
     out = jnp.einsum("bhk,hkd->bd", o, params["wo"])
     return {"k": k_cache, "v": v_cache}, out
+
+
+def chunk_write(buf, new, positions, gate, *, axis=2):
+    """Scatter a chunk of C tokens into a per-slot cache buffer.
+
+    buf has the sequence (span) dimension at ``axis`` (batch leading), e.g.
+    (B, Hkv, span, D) KV caches (axis=2) or (B, span, rank) MLA latent
+    caches (axis=1). new matches buf with span->C; positions: (B, C) target
+    slots; gate: (B, C) bool — gated-off tokens are dropped (their position
+    is pushed out of range, and the scatter uses mode='drop').
+    """
+    span = buf.shape[axis]
+    safe = jnp.where(gate, positions, span)  # out-of-range => dropped
+    ax = axis - 1  # per-example axis inside the vmap
+
+    def one(b, n, p):
+        b = jnp.moveaxis(b, ax, 0)
+        b = b.at[p].set(jnp.moveaxis(n, ax, 0), mode="drop")
+        return jnp.moveaxis(b, 0, ax)
+
+    return jax.vmap(one)(buf, new, safe)
+
+
+def attn_prefill_step(params, cache, x, cfg, lengths, n_valid, *, window=None):
+    """Chunked prefill: write a whole prompt chunk into the KV cache at once.
+
+    x: (B, C, D) chunk of token activations; lengths: (B,) tokens already
+    resident in the cache; n_valid: (B,) valid tokens in this chunk (0 for
+    idle slots — those write nothing and their output rows are garbage).
+
+    The chunk attends to [cache ++ chunk] with positional masking, so the
+    rolling (windowed) cache case is exact even when the chunk overwrites
+    slots that earlier chunk queries still need (DESIGN.md §6). Returns
+    (new_cache, out (B, C, D)).
+    """
+    B, C, _ = x.shape
+    span = cache["k"].shape[2]
+    idx = jnp.arange(C)[None, :]
+    positions = lengths[:, None] + idx                       # (B, C) absolute
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    chunk_valid = idx < n_valid[:, None]
+
+    # absolute position held by each cache slot *before* this chunk's write
+    slot = jnp.arange(span)[None, :]
+    if window is not None:
+        # rolling buffer: slot j last wrote position p <= lengths-1 with
+        # p % span == j
+        last = lengths[:, None] - 1
+        cache_pos = last - ((last - slot) % span)
+    else:
+        cache_pos = jnp.broadcast_to(slot, (B, span))
+    cache_valid = (cache_pos >= 0) & (cache_pos < lengths[:, None])
+
+    k_all = jnp.concatenate([cache["k"], k], axis=2)
+    v_all = jnp.concatenate([cache["v"], v], axis=2)
+    kv_positions = jnp.concatenate([cache_pos, positions], axis=1)
+    kv_valid = jnp.concatenate([cache_valid, chunk_valid], axis=1)
+
+    o = dispatch_prefill(
+        AttentionSpec.from_config(cfg, window=window), q, k_all, v_all,
+        q_positions=positions, kv_positions=kv_positions, kv_valid=kv_valid,
+    )
+    out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+
+    # write the chunk; when it is longer than a rolling span, only the last
+    # `span` valid tokens survive — skip the rest to avoid duplicate slots
+    gate = chunk_valid & (idx >= n_valid[:, None] - span)
+    wpos = positions % span if window is not None else positions
+    return {
+        "k": chunk_write(cache["k"], k, wpos, gate),
+        "v": chunk_write(cache["v"], v, wpos, gate),
+    }, out

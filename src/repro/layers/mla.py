@@ -3,7 +3,7 @@
 Queries and keys/values are produced through low-rank latents; the decode
 cache stores only the KV latent + shared RoPE key (kv_lora_rank +
 qk_rope_dim per token instead of 2*H*hd). The attention core itself still
-routes through ``repro.core.attention`` so the ExpMul technique applies
+routes through the backend registry so the ExpMul technique applies
 unchanged (DESIGN.md §4).
 """
 from __future__ import annotations
@@ -12,7 +12,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.attention import attention, decode_attention
+import repro.core.attention  # noqa: F401 — registers the built-in backends
+from repro.kernels.registry import (
+    AttentionSpec,
+    dispatch_attention,
+    dispatch_decode,
+    dispatch_prefill,
+)
+from repro.layers.attention_layer import chunk_write
 from repro.layers.common import dense_init, rmsnorm, rmsnorm_init
 from repro.layers.rotary import apply_rope
 
@@ -61,16 +68,9 @@ def mla_apply(params, x, cfg, *, positions=None, causal=True, window=None):
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
     q, k, v, _, _ = _mla_qkv(params, x, cfg, positions)
     scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
-    o = attention(
-        q, k, v,
-        causal=causal,
-        scale=scale,
-        window=window,
-        impl=cfg.attention_impl,
-        variant=cfg.attention_variant,
-        block_k=cfg.attention_block_k,
-        remat=cfg.remat,
-        q_chunks=cfg.attention_q_chunks,
+    o = dispatch_attention(
+        AttentionSpec.from_config(cfg, window=window), q, k, v,
+        causal=causal, scale=scale,
     )
     return jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
 
@@ -112,11 +112,68 @@ def mla_decode_step(params, cache, x1, cfg, lengths, *, window=None):
     )
     k = jnp.concatenate([k_nope, k_rope], axis=-1)
     scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
-    o = decode_attention(
-        q1, k, v, lengths + 1,
-        scale=scale,
-        impl="xla",
-        variant=cfg.attention_variant,
-    )
+    # the expanded-latent K is rebuilt per step (never a ring buffer): xla path
+    spec = AttentionSpec.from_config(cfg).replace(decode_impl="xla")
+    o = dispatch_decode(spec, q1, k, v, lengths + 1, scale=scale)
     out = jnp.einsum("bhk,hkd->bd", o, params["wo"])
     return {"kv_lat": kv_lat_c, "k_rope": k_rope_c}, out
+
+
+def _expand_latents(params, kv_lat, k_rope, cfg):
+    """(B, S, rank)+(B, S, rope) latents -> full (B, H, S, qk_head), (B, H, S, v)."""
+    m = cfg.mla
+    B, S, _ = kv_lat.shape
+    ukv = jnp.einsum("bsr,rhk->bhsk", kv_lat, params["w_ukv"])
+    k_nope, v = ukv[..., : m.qk_nope_dim], ukv[..., m.qk_nope_dim:]
+    k_rope = jnp.broadcast_to(
+        k_rope[:, None], (B, cfg.num_heads, S, m.qk_rope_dim)
+    )
+    return jnp.concatenate([k_nope, k_rope], axis=-1), v
+
+
+def mla_prefill_step(params, cache, x, cfg, lengths, n_valid):
+    """Chunked prefill for the MLA latent cache (DESIGN.md §6).
+
+    x: (B, C, D); lengths: (B,) tokens already resident; n_valid: (B,)
+    valid chunk tokens. Writes kv latents + roped shared key for the whole
+    chunk, expands the *pre-chunk* cache latents once, and attends the chunk
+    queries to [cache ++ chunk]. Returns (new_cache, out (B, C, D)).
+    """
+    if cfg.window:
+        # forward() windows MLA via mla_apply; the latent-cache prefill/decode
+        # paths do not mask by window yet — fail loudly rather than diverge
+        raise NotImplementedError("windowed MLA chunked prefill")
+    m = cfg.mla
+    B, C, _ = x.shape
+    idx = jnp.arange(C)[None, :]
+    positions = lengths[:, None] + idx
+    q, k_chunk, v_chunk, kv_lat, k_rope_raw = _mla_qkv(params, x, cfg, positions)
+
+    span = cache["kv_lat"].shape[1]
+    k_cache, v_cache = _expand_latents(
+        params, cache["kv_lat"], cache["k_rope"], cfg
+    )
+    k_all = jnp.concatenate([k_cache, k_chunk], axis=2)
+    v_all = jnp.concatenate([v_cache, v_chunk], axis=2)
+    slot = jnp.broadcast_to(jnp.arange(span)[None, :], (B, span))
+    kv_positions = jnp.concatenate([slot, positions], axis=1)
+    chunk_valid = idx < n_valid[:, None]
+    kv_valid = jnp.concatenate([slot < lengths[:, None], chunk_valid], axis=1)
+
+    scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    o = dispatch_prefill(
+        AttentionSpec.from_config(cfg), q, k_all, v_all, scale=scale,
+        q_positions=positions, kv_positions=kv_positions, kv_valid=kv_valid,
+    )
+    out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+
+    k_rope_chunk = apply_rope(
+        k_rope_raw[:, None, :, :], positions[:, None], cfg.rope_base
+    )[:, 0]
+    new_cache = {
+        "kv_lat": chunk_write(cache["kv_lat"], kv_lat, positions,
+                              chunk_valid, axis=1),
+        "k_rope": chunk_write(cache["k_rope"], k_rope_chunk, positions,
+                              chunk_valid, axis=1),
+    }
+    return new_cache, out

@@ -28,6 +28,7 @@ from repro.models.blocks import (
     block_decode_step,
     block_init,
     block_init_cache,
+    block_prefill,
 )
 
 
@@ -268,6 +269,56 @@ def encode_for_decode(params, state, frontend_embeds, enc_lengths, cfg):
     state["cross_kv"] = (ks, vs)
     state["enc_len"] = enc_lengths
     return state
+
+
+def prefill(params, state, tokens, lengths, n_valid, cfg: ModelConfig):
+    """Chunked prefill: run the flash path over a whole prompt chunk.
+
+    tokens: (B, C) teacher-forced chunk; lengths: (B,) tokens already in the
+    KV caches; n_valid: (B,) valid tokens per row (0 = idle slot, a no-op).
+    Every layer writes all valid chunk positions of its cache in one pass
+    and the logits of the last *valid* token per row are returned — so a
+    prompt of length L costs ceil(L / C) steps instead of L decode ticks,
+    and the final step's logits directly seed sampling (DESIGN.md §6).
+
+    Returns (logits (B, V), new_state).
+    """
+    if cfg.encoder_layers:
+        raise NotImplementedError("chunked prefill targets decoder-only "
+                                  "configs; encoder-decoder serving uses "
+                                  "encode_for_decode + decode_step")
+    _, norm = make_norm(cfg.norm)
+    B, C = tokens.shape
+    x = embed_apply(params["embed"], tokens, cfg).astype(_dtype(cfg))
+
+    def unit_body(carry, xs):
+        x, caches = carry
+        p_l, idx = xs
+        new_caches = []
+        for pos, kind in enumerate(_unit(cfg)):
+            c_l = jax.tree.map(
+                lambda buf: jax.lax.dynamic_index_in_dim(
+                    buf, idx, 0, keepdims=False),
+                caches[pos],
+            )
+            c_new, x = block_prefill(p_l[pos], c_l, x, cfg, kind, lengths,
+                                     n_valid)
+            new_caches.append(jax.tree.map(
+                lambda buf, n: jax.lax.dynamic_update_index_in_dim(
+                    buf, n.astype(buf.dtype), idx, 0),
+                caches[pos], c_new,
+            ))
+        return (x, tuple(new_caches)), None
+
+    (x, new_caches), _ = jax.lax.scan(
+        unit_body, (x, state["caches"]),
+        (params["units"], jnp.arange(_n_units(cfg))),
+    )
+    x = norm(params["final_norm"], x)
+    last = jnp.clip(n_valid - 1, 0, C - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+    logits = logits_apply(params["embed"], x_last, cfg)
+    return logits, {"caches": new_caches}
 
 
 def decode_step(params, state, tokens1, lengths, cfg: ModelConfig):

@@ -12,9 +12,16 @@ from repro.layers.attention_layer import (
     attn_decode_step,
     attn_init,
     attn_init_cache,
+    attn_prefill_step,
 )
 from repro.layers.common import make_norm
-from repro.layers.mla import mla_apply, mla_decode_step, mla_init, mla_init_cache
+from repro.layers.mla import (
+    mla_apply,
+    mla_decode_step,
+    mla_init,
+    mla_init_cache,
+    mla_prefill_step,
+)
 from repro.layers.mlp import mlp_apply, mlp_init
 from repro.layers.moe import moe_apply, moe_init
 from repro.layers.rglru import (
@@ -102,6 +109,53 @@ def block_init_cache(cfg, kind, batch, max_len, dtype):
     if kind == "slstm":
         return slstm_init_cache(cfg, batch, dtype)
     raise ValueError(kind)
+
+
+def block_prefill(params, cache, x, cfg, kind, lengths, n_valid):
+    """Chunked prefill through one residual block.
+
+    x: (B, C, D) chunk; lengths: (B,) tokens already resident in the cache;
+    n_valid: (B,) valid chunk tokens per row (0 = idle slot: state must not
+    change and output rows are ignored). Attention kinds fill all C cache
+    positions in one pass; recurrent kinds (no cache indexing, strictly
+    sequential state) scan the single-token step with per-token validity
+    gating — exact, just not parallel over the chunk.
+    """
+    _, norm = make_norm(cfg.norm)
+    if kind == "attn":
+        h = norm(params["norm_mix"], x)
+        if cfg.mla:
+            cache, h = mla_prefill_step(params["mix"], cache, h, cfg,
+                                        lengths, n_valid)
+        else:
+            window = cfg.window if cfg.window else None
+            cache, h = attn_prefill_step(params["mix"], cache, h, cfg,
+                                         lengths, n_valid, window=window)
+        x = x + h
+        if "ffn" in params:
+            h = norm(params["norm_ffn"], x)
+            if cfg.moe is not None:
+                h = moe_apply(params["ffn"], h, cfg, impl="scatter")
+            else:
+                h = mlp_apply(params["ffn"], h, cfg.activation)
+            x = x + h
+        return cache, x
+
+    def tok_body(carry, i):
+        cache = carry
+        x1 = jax.lax.dynamic_index_in_dim(x, i, 1, keepdims=False)
+        c_new, y1 = block_decode_step(params, cache, x1, cfg, kind,
+                                      lengths + i)
+        valid = i < n_valid  # (B,)
+        c_new = jax.tree.map(
+            lambda n, o: jnp.where(
+                valid.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+            c_new, cache,
+        )
+        return c_new, y1
+
+    cache, ys = jax.lax.scan(tok_body, cache, jnp.arange(x.shape[1]))
+    return cache, jnp.moveaxis(ys, 0, 1)
 
 
 def block_decode_step(params, cache, x1, cfg, kind, lengths):

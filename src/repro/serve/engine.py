@@ -1,11 +1,27 @@
-"""Slot-based serving engine with token-level continuous batching.
+"""Slot-based serving engine: chunked prefill + continuous decode batching.
 
-A fixed pool of ``slots`` shares one decode_step graph: every tick advances
-all active slots by one token (prompt tokens are teacher-forced, then
-generation switches to sampling). Finished slots free immediately and new
-requests join on the next tick — the vLLM-style continuous-batching loop in
-its TPU-friendly fixed-shape form. The attention variant (exact vs the
-paper's ExpMul) comes from the model config.
+A fixed pool of ``slots`` shares two compiled graphs (DESIGN.md §6):
+
+  prefill step   every slot contributes up to ``chunk_size`` tokens — the
+                 remaining prompt for prefilling slots, the single current
+                 token for decode-ready slots (a decode is just a 1-valid
+                 chunk), zero for idle slots. All valid positions of every
+                 layer's KV cache are written in one pass, so a prompt of
+                 length L is absorbed in ceil(L / chunk_size) engine steps
+                 instead of L teacher-forced ticks, and the step that
+                 consumes the last prompt token also emits the first
+                 sampled token.
+  decode tick    when no slot is prefilling, the cheap single-token graph
+                 advances all active slots by one sampled token.
+
+Finished slots free immediately and queued requests join on the next step —
+vLLM-style continuous batching in its TPU-friendly fixed-shape form (the
+chunk size is static, so each graph compiles once). The attention variant
+(exact vs the paper's ExpMul) comes from the model config via the backend
+registry.
+
+``chunk_size=1`` falls back to the legacy behavior: prompts are
+teacher-forced one token per tick through the decode graph.
 """
 from __future__ import annotations
 
@@ -15,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.api import decode_step, init_decode_state
+from repro.models.api import decode_step, init_decode_state, prefill
 from repro.serve.sampling import sample_token
 
 
@@ -26,15 +42,19 @@ class Request:
     max_new: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    pos: int = 0            # prompt tokens already consumed (prefill cursor)
+    first_token_step: int | None = None  # engine step that produced out[0]
 
 
 class ServeEngine:
     def __init__(self, params, cfg, *, slots: int = 8, max_len: int = 512,
-                 temperature: float = 0.0, seed: int = 0):
+                 chunk_size: int = 64, temperature: float = 0.0,
+                 seed: int = 0):
         self.params = params
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
+        self.chunk_size = max(1, int(chunk_size))
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
         self.state = init_decode_state(cfg, slots, max_len)
@@ -42,14 +62,25 @@ class ServeEngine:
         self.cur_tok = np.zeros((slots,), np.int32)
         self.requests: list[Request | None] = [None] * slots
         self.queue: list[Request] = []
-        self._step = jax.jit(
-            lambda params, state, toks, lens: decode_step(params, state, toks, lens, self.cfg)
+        self._decode = jax.jit(
+            lambda params, state, toks, lens: decode_step(
+                params, state, toks, lens, self.cfg)
         )
-        self.ticks = 0
+        self._prefill = jax.jit(
+            lambda params, state, toks, lens, nv: prefill(
+                params, state, toks, lens, nv, self.cfg)
+        )
+        self.ticks = 0            # total engine steps (prefill + decode)
+        self.prefill_steps = 0
+        self.decode_steps = 0
+        self.prompt_tokens = 0    # prompt tokens absorbed via chunked prefill
         self.tokens_generated = 0
 
     def submit(self, prompt, max_new: int, rid: int | None = None) -> Request:
-        req = Request(rid if rid is not None else len(self.queue), list(prompt), max_new)
+        prompt = list(prompt)
+        assert 0 < len(prompt) <= self.max_len - 1, len(prompt)
+        req = Request(rid if rid is not None else len(self.queue), prompt,
+                      max_new)
         self.queue.append(req)
         return req
 
@@ -70,33 +101,90 @@ class ServeEngine:
     def _needs_state_reset(self):
         return any(k in ("rglru", "mlstm", "slstm") for k in self.cfg.block_pattern)
 
-    def tick(self):
-        """Advance every active slot by one token."""
-        self._admit()
-        active = [s for s in range(self.slots) if self.requests[s] is not None]
-        if not active:
-            return False
-        logits, self.state = self._step(
+    def _finish_or_continue(self, s, tok):
+        """Record a sampled token for slot s; free the slot when done."""
+        req = self.requests[s]
+        if req.first_token_step is None:
+            req.first_token_step = self.ticks
+        req.out.append(tok)
+        self.cur_tok[s] = tok
+        self.tokens_generated += 1
+        if len(req.out) >= req.max_new or self.lengths[s] >= self.max_len - 1:
+            req.done = True
+            self.requests[s] = None
+
+    def _prefill_tick(self, active):
+        """One chunked step: prefilling slots absorb up to chunk_size prompt
+        tokens; decode-ready slots ride along as 1-valid chunks."""
+        C = self.chunk_size
+        toks = np.zeros((self.slots, C), np.int32)
+        nv = np.zeros((self.slots,), np.int32)
+        for s in active:
+            req = self.requests[s]
+            if req.pos < len(req.prompt):
+                take = min(C, len(req.prompt) - req.pos)
+                toks[s, :take] = req.prompt[req.pos:req.pos + take]
+            else:
+                take = 1
+                toks[s, 0] = self.cur_tok[s]
+            nv[s] = take
+        logits, self.state = self._prefill(
+            self.params, self.state, jnp.asarray(toks),
+            jnp.asarray(self.lengths), jnp.asarray(nv),
+        )
+        self.key, sk = jax.random.split(self.key)
+        nxt = np.asarray(sample_token(sk, logits, temperature=self.temperature))
+        self.ticks += 1
+        self.prefill_steps += 1
+        for s in active:
+            req = self.requests[s]
+            take = int(nv[s])
+            self.lengths[s] += take
+            if req.pos < len(req.prompt):       # was prefilling this step
+                req.pos += take
+                self.prompt_tokens += take
+                if req.pos < len(req.prompt):
+                    continue                    # still mid-prompt: no sample
+            self._finish_or_continue(s, int(nxt[s]))
+
+    def _decode_tick(self, active):
+        """Legacy single-token step; with chunk_size=1 it also teacher-forces
+        prompts (the pre-chunked-prefill behavior)."""
+        logits, self.state = self._decode(
             self.params, self.state,
             jnp.asarray(self.cur_tok), jnp.asarray(self.lengths),
         )
         self.key, sk = jax.random.split(self.key)
         nxt = np.asarray(sample_token(sk, logits, temperature=self.temperature))
         self.ticks += 1
+        self.decode_steps += 1
         for s in active:
             req = self.requests[s]
+            if self.lengths[s] < len(req.prompt):
+                # the token written this tick was a prompt token (counted
+                # pre-increment so prompt[0] is included, matching prefill)
+                self.prompt_tokens += 1
             self.lengths[s] += 1
+            req.pos = max(req.pos, int(self.lengths[s]))
             pos = int(self.lengths[s])
-            if pos < len(req.prompt):  # still prefilling: teacher-force
+            if pos < len(req.prompt):           # teacher-forcing (chunk=1)
                 self.cur_tok[s] = req.prompt[pos]
             else:
-                tok = int(nxt[s])
-                req.out.append(tok)
-                self.cur_tok[s] = tok
-                self.tokens_generated += 1
-                if len(req.out) >= req.max_new or pos >= self.max_len - 1:
-                    req.done = True
-                    self.requests[s] = None
+                self._finish_or_continue(s, int(nxt[s]))
+
+    def tick(self):
+        """Advance the engine by one step (prefill or decode)."""
+        self._admit()
+        active = [s for s in range(self.slots) if self.requests[s] is not None]
+        if not active:
+            return False
+        prefilling = self.chunk_size > 1 and any(
+            self.requests[s].pos < len(self.requests[s].prompt) for s in active
+        )
+        if prefilling:
+            self._prefill_tick(active)
+        else:
+            self._decode_tick(active)
         return True
 
     def run(self):

@@ -1,4 +1,5 @@
 """Checkpoint: roundtrip, async save, elastic reshard (different mesh)."""
+import os
 import subprocess
 import sys
 
@@ -86,10 +87,12 @@ print("ELASTIC_OK")
 
 
 def test_elastic_reshard_across_meshes(tmp_path):
+    # inherit the parent env: stripping it drops platform pins like
+    # JAX_PLATFORMS=cpu and jax's backend discovery can hang on import
     r = subprocess.run(
         [sys.executable, "-c", _ELASTIC_SCRIPT, str(tmp_path)],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd="/root/repo",
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     )
     assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr

@@ -5,7 +5,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # property tests need hypothesis; the sweep tests below do not
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels.expmul.expmul import expmul_pallas
 from repro.kernels.expmul.ref import expmul_exact_ref, expmul_ref, _lhat_ref
@@ -95,42 +100,42 @@ def test_output_is_power_of_two_times_v():
     assert np.all((vb & 0x807FFFFF)[nonzero] == (ob & 0x807FFFFF)[nonzero])
 
 
-@settings(max_examples=200, deadline=None)
-@given(
-    x=st.floats(min_value=-60.0, max_value=0.0),
-    v=st.floats(min_value=-8e24, max_value=8e24).filter(
-        lambda t: t == 0.0 or abs(t) > 1e-35
-    ),
-)
-def test_property_scalar_matches_oracle(x, v):
-    xa = jnp.array([x], jnp.float32)
-    va = jnp.array([[v]], jnp.float32)
-    got = np.asarray(expmul_jnp(xa[:, None], va))
-    want = np.asarray(expmul_ref(xa[:, None], va))
-    np.testing.assert_array_equal(got, want)
+if HAVE_HYPOTHESIS:
 
+    @settings(max_examples=200, deadline=None)
+    @given(
+        x=st.floats(min_value=-60.0, max_value=0.0),
+        v=st.floats(min_value=-8e24, max_value=8e24).filter(
+            lambda t: t == 0.0 or abs(t) > 1e-35
+        ),
+    )
+    def test_property_scalar_matches_oracle(x, v):
+        xa = jnp.array([x], jnp.float32)
+        va = jnp.array([[v]], jnp.float32)
+        got = np.asarray(expmul_jnp(xa[:, None], va))
+        want = np.asarray(expmul_ref(xa[:, None], va))
+        np.testing.assert_array_equal(got, want)
 
-@settings(max_examples=100, deadline=None)
-@given(
-    x1=st.floats(min_value=-14.9, max_value=-0.1),
-    dx=st.floats(min_value=0.01, max_value=5.0),
-)
-def test_property_lhat_monotone(x1, dx):
-    """More negative x -> larger or equal L_hat (e^x smaller)."""
-    l1 = int(log2exp_lhat(jnp.array(x1)))
-    l2 = int(log2exp_lhat(jnp.array(max(x1 - dx, -15.0))))
-    assert l2 >= l1
+    @settings(max_examples=100, deadline=None)
+    @given(
+        x1=st.floats(min_value=-14.9, max_value=-0.1),
+        dx=st.floats(min_value=0.01, max_value=5.0),
+    )
+    def test_property_lhat_monotone(x1, dx):
+        """More negative x -> larger or equal L_hat (e^x smaller)."""
+        l1 = int(log2exp_lhat(jnp.array(x1)))
+        l2 = int(log2exp_lhat(jnp.array(max(x1 - dx, -15.0))))
+        assert l2 >= l1
 
-
-@settings(max_examples=100, deadline=None)
-@given(x=st.floats(min_value=-15.0, max_value=0.0))
-def test_property_pow2_neg_consistent(x):
-    """pow2_neg(L) * v == apply_pow2_scale(v, L) for normal v."""
-    l = log2exp_lhat(jnp.array(x))
-    p = float(pow2_neg(l))
-    v = jnp.array([[1.5]], jnp.float32)
-    direct = float(expmul_jnp(jnp.array([[x]]), v)[0, 0])
-    assert p * 1.5 == direct
+    @settings(max_examples=100, deadline=None)
+    @given(x=st.floats(min_value=-15.0, max_value=0.0))
+    def test_property_pow2_neg_consistent(x):
+        """pow2_neg(L) * v == apply_pow2_scale(v, L) for normal v."""
+        l = log2exp_lhat(jnp.array(x))
+        p = float(pow2_neg(l))
+        v = jnp.array([[1.5]], jnp.float32)
+        direct = float(expmul_jnp(jnp.array([[x]]), v)[0, 0])
+        assert p * 1.5 == direct
 
 
 def test_ste_gradients_are_exact_exp():

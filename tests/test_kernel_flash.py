@@ -158,3 +158,15 @@ def test_flash_jnp_expmul_ste_grads_finite():
     for g in grads:
         assert np.all(np.isfinite(np.asarray(g)))
         assert np.abs(np.asarray(g)).max() > 0
+
+
+def test_ref_expmul_fully_masked_rows_are_zero_not_nan():
+    """Sq > Sk + window leaves late query rows with no visible keys; the
+    expmul path must emit zeros there (denominator guard), like exact."""
+    q, k, v = _mk(jax.random.PRNGKey(44), 1, 2, 2, 6, 2, 16, jnp.float32)
+    for variant in ("exact", "expmul"):
+        out = np.asarray(core_ref(q, k, v, causal=True, window=1,
+                                  variant=variant))
+        assert np.all(np.isfinite(out))
+        # rows >= Sk + window see no keys at all
+        np.testing.assert_array_equal(out[:, :, 3:, :], 0.0)

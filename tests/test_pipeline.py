@@ -1,5 +1,6 @@
 """Pipeline parallelism (GPipe schedule over 'pp' axis) on fake devices —
 run in a subprocess so the main test process keeps 1 CPU device."""
+import os
 import subprocess
 import sys
 
@@ -35,7 +36,9 @@ def test_pipeline_matches_sequential():
     r = subprocess.run(
         [sys.executable, "-c", _SCRIPT],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd="/root/repo",
+        # inherit the parent env: stripping it drops platform pins like
+        # JAX_PLATFORMS=cpu and jax's backend discovery can hang on import
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     )
     assert "PIPELINE_OK" in r.stdout, r.stdout + r.stderr

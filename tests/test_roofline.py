@@ -1,5 +1,6 @@
 """Roofline machinery: trip-count-aware HLO costs vs unrolled references,
 collective wire-byte parsing, and dry-run cell smoke (small mesh)."""
+import os
 import subprocess
 import sys
 
@@ -74,6 +75,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 from jax.sharding import PartitionSpec as P
 from repro.configs import get_config
+from repro.launch.mesh import set_mesh
 from repro.launch.roofline import analyze, model_flops_per_device
 from repro.configs.shapes import ShapeSpec
 from repro.models.inputs import input_specs
@@ -84,7 +86,7 @@ from repro.optim.adamw import adamw
 cfg = get_config("qwen2-0.5b", smoke=True)
 mesh = jax.make_mesh((4, 2), ("data", "model"))
 opt = adamw(1e-3)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     shapes = make_train_state_specs(cfg, opt)
     st_sh = state_shardings(shapes, mesh)
     b_shapes = input_specs(cfg, seq_len=64, global_batch=8, kind="train")
@@ -105,7 +107,9 @@ def test_dryrun_roofline_small_mesh():
     r = subprocess.run(
         [sys.executable, "-c", _DRYRUN_SMALL],
         capture_output=True, text=True, timeout=560,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd="/root/repo",
+        # inherit the parent env: stripping it drops platform pins like
+        # JAX_PLATFORMS=cpu and jax's backend discovery can hang on import
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     )
     assert "SMALL_DRYRUN_OK" in r.stdout, r.stdout + r.stderr
