@@ -1,16 +1,26 @@
-"""Serving-path throughput: chunked prefill vs decode, exact vs ExpMul.
+"""Serving-path throughput: chunked prefill vs decode, exact vs ExpMul,
+contiguous vs paged KV cache.
 
 Drives real requests through ``ServeEngine`` (CPU software proxy — the TPU
-target's win is VPU op count) and measures:
+target's win is VPU op count) at *mixed prompt lengths* and measures:
 
   * prefill tokens/sec — prompt tokens absorbed by the chunked-prefill graph
   * decode tokens/sec  — sampled tokens from the single-token graph
   * first-token engine steps vs the legacy teacher-forced path
+  * KV memory utilization — reserved vs peak-resident vs peak-active tokens
+    (the paged pool allocates blocks on demand, so its resident KV tracks
+    actual lengths instead of slots x max_len; DESIGN.md §7)
+  * preemptions / evictions / recompute tokens when the pool is tight
 
-Emits ``BENCH_serve.json`` next to this file so the perf trajectory of the
-serving path is tracked across PRs.
+Token streams are asserted identical between the contiguous and paged runs
+of each variant (temperature 0), so the numbers always describe equivalent
+output.
+
+Emits ``BENCH_serve.json`` next to the repo root so the perf trajectory of
+the serving path is tracked across PRs (schema: benchmarks/README.md).
 
   PYTHONPATH=src python benchmarks/serve_throughput.py [--arch qwen2-0.5b]
+  PYTHONPATH=src python benchmarks/serve_throughput.py --smoke   # CI mode
 """
 from __future__ import annotations
 
@@ -25,47 +35,62 @@ import numpy as np
 from repro.configs import get_config
 from repro.models.api import init_model
 from repro.serve.engine import ServeEngine
+from repro.serve.paged import blocks_for
 
 
-def bench_variant(params, cfg0, variant, *, slots, prompt_len, max_new,
-                  chunk, max_len):
+def mixed_prompts(rng, vocab, slots, prompt_len):
+    """One long prompt plus a spread of shorter ones (mixed-length traffic:
+    the case where contiguous slot provisioning wastes the most KV)."""
+    lens = [max(4, prompt_len >> i) for i in range(slots)]
+    return [list(rng.integers(1, vocab, size=n)) for n in lens]
+
+
+def bench_run(params, cfg0, variant, kv_layout, *, slots, prompt_len,
+              max_new, chunk, max_len, page_size, pool_frac):
     cfg = cfg0.replace(attention_variant=variant)
     rng = np.random.default_rng(0)
-    prompts = [list(rng.integers(1, cfg.vocab_size, size=prompt_len))
-               for _ in range(slots)]
+    prompts = mixed_prompts(rng, cfg.vocab_size, slots, prompt_len)
+
+    kw = {"slots": slots, "max_len": max_len, "chunk_size": chunk,
+          "kv_layout": kv_layout}
+    if kv_layout == "paged":
+        full = slots * blocks_for(max_len, page_size)
+        kw.update(page_size=page_size,
+                  pool_blocks=max(2, int(full * pool_frac)))
 
     # warmup: compile both graphs on a throwaway engine
-    warm = ServeEngine(params, cfg, slots=slots, max_len=max_len,
-                       chunk_size=chunk)
+    warm = ServeEngine(params, cfg, **kw)
     for p in prompts:
         warm.submit(p, 2)
     warm.run()
 
-    eng = ServeEngine(params, cfg, slots=slots, max_len=max_len,
-                      chunk_size=chunk)
+    eng = ServeEngine(params, cfg, **kw)
     reqs = [eng.submit(p, max_new, rid=i) for i, p in enumerate(prompts)]
 
     t0 = time.time()
-    while any(r.pos < len(r.prompt) for r in reqs):
+    while any(not r.done and r.pos < len(r.prefill_toks) for r in reqs):
         eng.tick()
     t_prefill = time.time() - t0
-    prefill_tokens = eng.prompt_tokens
+    prefill_tokens = eng.prompt_tokens + eng.recompute_tokens
 
     t0 = time.time()
     eng.run()
     t_decode = time.time() - t0
 
     assert all(r.done for r in reqs)
-    return {
+    r = {
         "variant": variant,
+        "prompt_lens": [len(p) for p in prompts],
         "prefill_tokens": int(prefill_tokens),
         "prefill_steps": int(eng.prefill_steps),
         "decode_steps": int(eng.decode_steps),
         "prefill_tok_per_s": prefill_tokens / max(t_prefill, 1e-9),
         "decode_tok_per_s": eng.tokens_generated / max(t_decode, 1e-9),
         "first_token_steps": max(r.first_token_step for r in reqs),
-        "legacy_first_token_steps": prompt_len,  # one tick per prompt token
+        "legacy_first_token_steps": max(len(p) for p in prompts),
     }
+    r.update(eng.memory_stats())
+    return r, [q.out for q in reqs]
 
 
 def main(argv=None):
@@ -76,9 +101,19 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--chunk", type=int, default=64)
     ap.add_argument("--max-len", type=int, default=384)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pool-frac", type=float, default=0.5,
+                    help="paged pool size as a fraction of the fully "
+                         "provisioned slots*max_len (small enough to show "
+                         "the memory win, large enough to avoid thrashing)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fast configuration for CI")
     ap.add_argument("--out", default=str(
         pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"))
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.slots, args.prompt_len, args.max_new = 2, 32, 8
+        args.chunk, args.max_len, args.page_size = 16, 64, 8
 
     cfg = get_config(args.arch, smoke=True, dtype="float32",
                      param_dtype="float32")
@@ -92,20 +127,44 @@ def main(argv=None):
         "prompt_len": args.prompt_len,
         "max_new": args.max_new,
         "chunk": args.chunk,
-        "variants": [],
+        "page_size": args.page_size,
+        "pool_frac": args.pool_frac,
+        "runs": [],
     }
     print(f"# serve_throughput {args.arch} slots={args.slots} "
-          f"prompt={args.prompt_len} chunk={args.chunk}")
+          f"prompt<={args.prompt_len} chunk={args.chunk} "
+          f"page={args.page_size}")
     for variant in ("exact", "expmul"):
-        r = bench_variant(params, cfg, variant, slots=args.slots,
-                          prompt_len=args.prompt_len, max_new=args.max_new,
-                          chunk=args.chunk, max_len=args.max_len)
-        results["variants"].append(r)
-        print(f"  {variant:7s}: prefill {r['prefill_tok_per_s']:9.1f} tok/s "
-              f"({r['prefill_steps']} steps), decode "
-              f"{r['decode_tok_per_s']:7.1f} tok/s, first token at step "
-              f"{r['first_token_steps']} (legacy: "
-              f"{r['legacy_first_token_steps']})")
+        streams = {}
+        for kv_layout in ("contiguous", "paged"):
+            r, outs = bench_run(
+                params, cfg, variant, kv_layout, slots=args.slots,
+                prompt_len=args.prompt_len, max_new=args.max_new,
+                chunk=args.chunk, max_len=args.max_len,
+                page_size=args.page_size, pool_frac=args.pool_frac)
+            streams[kv_layout] = outs
+            results["runs"].append(r)
+            print(f"  {variant:7s}/{kv_layout:10s}: prefill "
+                  f"{r['prefill_tok_per_s']:9.1f} tok/s "
+                  f"({r['prefill_steps']} steps), decode "
+                  f"{r['decode_tok_per_s']:7.1f} tok/s, first tok step "
+                  f"{r['first_token_steps']} (legacy "
+                  f"{r['legacy_first_token_steps']}), KV "
+                  f"{r['kv_peak_used_tokens']}/{r['kv_reserved_tokens']} tok "
+                  f"({r['kv_tokens_per_active_token']:.2f}x active), "
+                  f"preempt {r['preemptions']}")
+        assert streams["contiguous"] == streams["paged"], \
+            f"paged token streams diverged from contiguous ({variant})"
+
+    # headline: paged resident KV per active token vs contiguous reservation
+    cont = next(r for r in results["runs"] if r["kv_layout"] == "contiguous")
+    paged = next(r for r in results["runs"] if r["kv_layout"] == "paged")
+    results["kv_memory_reduction_vs_contiguous"] = (
+        1.0 - paged["kv_tokens_per_active_token"]
+        / cont["kv_tokens_per_active_token"])
+    print(f"  paged KV per active token: "
+          f"{results['kv_memory_reduction_vs_contiguous']:.1%} below "
+          f"contiguous at mixed prompt lengths")
 
     pathlib.Path(args.out).write_text(json.dumps(results, indent=2) + "\n")
     print(f"wrote {args.out}")

@@ -75,6 +75,11 @@ class ModelConfig:
     attention_q_chunks: int = 4            # causal block skipping (1 = off)
     attention_decode_impl: str | None = None   # None: derived from impl
     attention_prefill_impl: str | None = None  # None: masked_xla
+    attention_paged_impl: str | None = None    # None: gather_xla
+
+    # paged KV-cache serving defaults (DESIGN §7; engine args override)
+    page_size: int = 16            # tokens per KV block
+    pool_blocks: int = 0           # 0: engine fully provisions slots*max_len
     dtype: str = "bfloat16"
     param_dtype: str = "bfloat16"
     opt_state_dtype: str = "float32"       # bf16 for the 1T-class models

@@ -23,3 +23,51 @@ def get_config(arch: str, *, smoke: bool = False, **overrides):
     mod = importlib.import_module(_ARCH_MODULES[arch])
     cfg = mod.SMOKE if smoke else mod.CONFIG
     return cfg.replace(**overrides) if overrides else cfg
+
+
+def _notes(cfg) -> str:
+    bits = []
+    if cfg.mla is not None:
+        bits.append("MLA latent KV")
+    elif cfg.num_kv_heads == 1:
+        bits.append("MQA")
+    elif cfg.num_kv_heads < cfg.num_heads:
+        bits.append(f"GQA {cfg.num_heads}:{cfg.num_kv_heads}")
+    if cfg.moe is not None:
+        bits.append(f"MoE {cfg.moe.num_experts}e/top{cfg.moe.top_k}")
+    kinds = set(cfg.block_pattern)
+    if kinds - {"attn"}:
+        bits.append("+".join(sorted(kinds - {"attn"})) + " blocks")
+    if cfg.window:
+        bits.append(f"window {cfg.window}")
+    if cfg.encoder_layers:
+        bits.append("enc-dec")
+    if cfg.frontend:
+        bits.append(f"{cfg.frontend} frontend")
+    return ", ".join(bits) or "dense attention"
+
+
+def zoo_table() -> str:
+    """Markdown model-zoo table — the source of README.md's table.
+
+    Regenerate with:
+      PYTHONPATH=src python -c \
+        "from repro.configs.registry import zoo_table; print(zoo_table())"
+    """
+    rows = ["| arch id | family | layers | d_model | heads | params | notes |",
+            "|---|---|---|---|---|---|---|"]
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        p = cfg.param_count()
+        if p >= 1e12:
+            params = f"{p / 1e12:.2f}T"
+        elif p >= 1e9:
+            params = f"{p / 1e9:.1f}B"
+        else:
+            params = f"{p / 1e6:.0f}M"
+        layers = (f"{cfg.encoder_layers}+{cfg.decoder_layers}"
+                  if cfg.encoder_layers else str(cfg.num_layers))
+        rows.append(
+            f"| `{arch}` | {cfg.family} | {layers} | {cfg.d_model} "
+            f"| {cfg.num_heads} | {params} | {_notes(cfg)} |")
+    return "\n".join(rows)

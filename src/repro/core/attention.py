@@ -31,13 +31,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.flash.ops import flash_attention_fwd
-from repro.kernels.decode.ops import decode_attention_pallas
+from repro.kernels.decode.ops import (
+    decode_attention_pallas,
+    paged_decode_attention_pallas,
+)
+from repro.kernels.paged import gather_rows
 from repro.kernels.registry import (
     AttentionSpec,
     dispatch_attention,
     dispatch_decode,
     register_attention,
     register_decode,
+    register_paged_decode,
+    register_paged_prefill,
     register_prefill,
 )
 from repro.numerics.log2exp import (
@@ -341,18 +347,19 @@ def _prefill_masked_xla(q, k, v, *, spec, scale, q_positions, kv_positions,
                              variant=spec.variant, use_ste=spec.use_ste)
 
 
-@register_decode("xla")
-def _decode_xla(q, k_cache, v_cache, lengths, *, spec, scale):
+def _masked_decode_xla(q, k_cache, v_cache, mask, *, variant, scale):
+    """Shared single-token decode core: q (B,H,D), caches (B,Hkv,S,·),
+    mask (B, S) bool over cache rows."""
     B, H, D = q.shape
     _, Hkv, S, _ = k_cache.shape
     group = H // Hkv
     scale = float(1.0 / np.sqrt(D)) if scale is None else scale
     qf = q.astype(jnp.float32).reshape(B, Hkv, group, D)
     s = jnp.einsum("bhgd,bhkd->bhgk", qf, k_cache.astype(jnp.float32)) * scale
-    mask = (jnp.arange(S)[None, :] < lengths[:, None])[:, None, None, :]
+    mask = mask[:, None, None, :]
     s = jnp.where(mask, s, MASK_VALUE)
     m = jnp.max(s, axis=-1, keepdims=True)
-    if spec.variant == "expmul":
+    if variant == "expmul":
         p = pow2_neg(log2exp_lhat(s - m), jnp.float32)
     else:
         p = jnp.exp(s - m)
@@ -364,12 +371,94 @@ def _decode_xla(q, k_cache, v_cache, lengths, *, spec, scale):
     return o.reshape(B, H, Dv).astype(q.dtype)
 
 
+@register_decode("xla")
+def _decode_xla(q, k_cache, v_cache, lengths, *, spec, scale):
+    S = k_cache.shape[2]
+    mask = jnp.arange(S)[None, :] < lengths[:, None]
+    return _masked_decode_xla(q, k_cache, v_cache, mask,
+                              variant=spec.variant, scale=scale)
+
+
 @register_decode("pallas")
 def _decode_pallas(q, k_cache, v_cache, lengths, *, spec, scale):
     return decode_attention_pallas(
         q, k_cache, v_cache, lengths, scale=scale, variant=spec.variant,
         block_k=spec.decode_block_k,
     )
+
+
+# ---------------------------------------------------------------------------
+# Paged (block-table) attention: gather-then-compute built-ins (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+def _gather_kv(pool, rows):
+    """(pool_tokens, Hkv, ·) pool + (B, L) rows -> (B, Hkv, L, ·)."""
+    return jnp.moveaxis(gather_rows(pool, rows), 1, 2)
+
+
+@register_paged_prefill("gather_xla")
+def _paged_prefill_gather_xla(q, k_chunk, v_chunk, k_pool, v_pool, rows, *,
+                              spec, scale, q_positions, chunk_valid, lengths):
+    """Gather the paged history, concat the fresh chunk, and run the exact
+    positional-masking prefill math as the contiguous ``masked_xla`` path.
+
+    The gathered rows are in logical position order, so kv position j is
+    simply j — the same masking rule as a fresh contiguous cache, for every
+    variant (exact/expmul) and for local windows."""
+    B, L = rows.shape
+    k_all = jnp.concatenate([_gather_kv(k_pool, rows), k_chunk], axis=2)
+    v_all = jnp.concatenate([_gather_kv(v_pool, rows), v_chunk], axis=2)
+    hist_pos = jnp.broadcast_to(jnp.arange(L)[None, :], (B, L))
+    kv_positions = jnp.concatenate([hist_pos, q_positions], axis=1)
+    kv_valid = jnp.concatenate(
+        [hist_pos < lengths[:, None], chunk_valid], axis=1)
+    return prefill_attention(
+        q, k_all, v_all, q_positions=q_positions, kv_positions=kv_positions,
+        kv_valid=kv_valid, scale=scale, window=spec.window,
+        variant=spec.variant, use_ste=spec.use_ste)
+
+
+@register_paged_prefill("gather_pallas")
+def _paged_prefill_gather_pallas(q, k_chunk, v_chunk, k_pool, v_pool, rows,
+                                 *, spec, scale, q_positions, chunk_valid,
+                                 lengths):
+    # No Pallas prefill kernel yet (positional masks): the "gather_pallas"
+    # family uses the Pallas kernel for decode and falls back to the masked
+    # XLA path for prefill, so one paged_impl knob selects a working pair.
+    return _paged_prefill_gather_xla(
+        q, k_chunk, v_chunk, k_pool, v_pool, rows, spec=spec, scale=scale,
+        q_positions=q_positions, chunk_valid=chunk_valid, lengths=lengths)
+
+
+@register_paged_decode("gather_pallas")
+def _paged_decode_gather_pallas(q, k_pool, v_pool, rows, lengths, *, spec,
+                                scale):
+    if spec.window is not None:
+        # the flash-decode kernel masks only by length; windows need the
+        # positional path
+        return _paged_decode_gather_xla(q, k_pool, v_pool, rows, lengths,
+                                        spec=spec, scale=scale)
+    return paged_decode_attention_pallas(
+        q, k_pool, v_pool, rows, lengths, scale=scale, variant=spec.variant,
+        block_k=spec.decode_block_k)
+
+
+@register_paged_decode("gather_xla")
+def _paged_decode_gather_xla(q, k_pool, v_pool, rows, lengths, *, spec,
+                             scale):
+    """Gather the paged history (current token included) and decode.
+
+    Unlike the contiguous rolling-buffer decode, windowed layers here keep
+    absolute positions, so the window is enforced by masking rows below
+    ``lengths - window`` instead of by buffer wrap-around — the same valid
+    set, hence the same softmax (order-invariant, DESIGN.md §7)."""
+    L = rows.shape[1]
+    pos = jnp.arange(L)[None, :]
+    mask = pos < lengths[:, None]
+    if spec.window is not None:
+        mask &= pos >= lengths[:, None] - spec.window
+    return _masked_decode_xla(q, _gather_kv(k_pool, rows),
+                              _gather_kv(v_pool, rows), mask,
+                              variant=spec.variant, scale=scale)
 
 
 # ---------------------------------------------------------------------------

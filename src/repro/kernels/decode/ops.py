@@ -1,4 +1,5 @@
-"""Public wrapper for the flash-decode Pallas kernel."""
+"""Public wrappers for the flash-decode Pallas kernel: contiguous caches
+and the paged (block-table) layout."""
 from __future__ import annotations
 
 import jax
@@ -6,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.decode.decode import _LANES, decode_fwd_pallas
+from repro.kernels.paged import gather_rows
 
 
 def decode_attention_pallas(
@@ -42,3 +44,32 @@ def decode_attention_pallas(
         interpret=interpret,
     )
     return o3.reshape(B, Hkv, group, D).reshape(B, H, D)
+
+
+def paged_decode_attention_pallas(
+    q: jax.Array,       # (B, H, D)
+    k_pool: jax.Array,  # (pool_tokens, Hkv, D) flat physical pool
+    v_pool: jax.Array,
+    rows: jax.Array,    # (B, L) physical rows in logical position order
+    lengths: jax.Array,  # (B,) valid entries incl. the current token
+    *,
+    scale: float | None = None,
+    variant: str = "exact",
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Block-table decode on the Pallas flash-decode kernel (DESIGN.md §7).
+
+    The paged history is gathered into logical position order (an XLA
+    gather; sentinel rows read zero and sit beyond ``lengths``, so the
+    kernel's length masking hides them) and handed to the same tiled
+    online-softmax kernel as the contiguous path — exact/expmul variants
+    apply unchanged. Windowed layers need positional masking the kernel
+    does not implement; use the ``gather_xla`` paged path for those.
+    """
+    k_cache = jnp.moveaxis(gather_rows(k_pool, rows), 1, 2)  # (B, Hkv, L, D)
+    v_cache = jnp.moveaxis(gather_rows(v_pool, rows), 1, 2)
+    return decode_attention_pallas(
+        q, k_cache, v_cache, lengths, scale=scale, variant=variant,
+        block_k=block_k, interpret=interpret,
+    )

@@ -1,3 +1,18 @@
+"""ExpMul kernel package: the paper's fused exp-and-multiply operator.
+
+Three implementations share one numerics contract (normative statement:
+``repro/numerics/log2exp.py``; DESIGN.md §2 — fixed-point format, clip
+range [-15, 0], the 1.4375 ~= log2 e shift-add identity, underflow/flush
+rules, 0.493 max relative error):
+
+  * ``expmul_pallas``  — the Pallas TPU kernel (integer/bit ops only);
+  * ``expmul_ref``     — frexp/ldexp "textbook" oracle (``ref.py``),
+                         structurally independent cross-check;
+  * ``expmul_rows``    — shape-agnostic public entry point (``ops.py``).
+
+``expmul_exact_ref`` computes the exact ``e^x * v`` baseline for error
+measurements.
+"""
 from repro.kernels.expmul.ops import expmul_pallas, expmul_rows
 from repro.kernels.expmul.ref import expmul_ref, expmul_exact_ref
 

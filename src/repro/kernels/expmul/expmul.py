@@ -5,6 +5,15 @@ Alg. 3 to one (block_rows, block_d) tile: integer shift-add Log2Exp on the
 per-row scalars, then an exponent-field subtraction on the V tile. All
 arithmetic inside the kernel is integer/bit ops on the VPU — no transcendental
 and no FP multiply, which is the paper's point.
+
+Numerics contract (normative statement: ``repro/numerics/log2exp.py``
+module docstring; DESIGN.md §2): inputs clip to ``[-15, 0]`` and quantize
+to 16-bit fixed point (10 fraction bits); ``x*log2(e)`` is the shift-add
+``x + x>>1 - x>>4`` (1.4375 ~= log2 e) with arithmetic shifts; biased-
+exponent underflow and denormals flush to zero; ``x = 0`` is the identity;
+max relative error of the quantized ``e^x`` is 0.493 over the clip range.
+This kernel inherits the contract bit-exactly by calling the same
+``log2exp_lhat`` / ``apply_pow2_scale`` primitives the jnp oracle uses.
 """
 from __future__ import annotations
 

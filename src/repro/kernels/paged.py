@@ -1,0 +1,77 @@
+"""Device-side paged KV-cache primitives (DESIGN.md §7).
+
+A paged cache stores KV rows in a *flat token pool*: a single leading axis of
+``pool_tokens = pool_blocks * page_size`` physical rows shared by every
+sequence. Logical position ``p`` of the sequence in slot ``b`` lives at
+physical row ``block_table[b, p // page_size] * page_size + p % page_size``.
+Because a block's rows are contiguous multiples of ``page_size``, the block
+structure is purely an indexing convention — gather and scatter are plain
+row-indexed ops, which XLA lowers without any custom kernel.
+
+Host-side block allocation (free lists, eviction, preemption) lives in
+``repro.serve.paged``; this module is the jit-traceable half and imports
+nothing but JAX so any layer or kernel can use it without import cycles.
+
+Sentinel convention: unallocated block-table entries hold ``pool_blocks``
+(one past the last valid block), so every derived row index is out of range.
+``gather_rows`` fills such rows with zeros (they are masked by validity
+anyway) and ``scatter_rows`` drops writes to them — an idle or freed slot is
+an exact no-op on the pool.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def slot_rows(block_table, page_size: int):
+    """Physical rows covering every logical position of each sequence.
+
+    block_table: (B, max_blocks) int32 physical block ids (sentinel =
+    pool_blocks for unallocated entries). Returns (B, max_blocks * page_size)
+    rows such that ``rows[b, p]`` is the physical row of logical position p —
+    the gather index set for attention over the whole (masked) history.
+    """
+    B, M = block_table.shape
+    rows = (
+        block_table[:, :, None].astype(jnp.int32) * page_size
+        + jnp.arange(page_size, dtype=jnp.int32)[None, None, :]
+    )
+    return rows.reshape(B, M * page_size)
+
+
+def token_rows(block_table, positions, page_size: int):
+    """Physical rows for specific logical positions (the write targets).
+
+    positions: (B,) or (B, C) absolute token positions. Block lookups are
+    clamped into the table (XLA gather semantics); callers gate positions
+    beyond the allocated region with a validity mask on the scatter instead.
+    Returns rows shaped like ``positions``.
+    """
+    pos = positions if positions.ndim == 2 else positions[:, None]
+    blk = jnp.clip(pos // page_size, 0, block_table.shape[1] - 1)
+    phys = jnp.take_along_axis(block_table, blk, axis=1)
+    rows = phys.astype(jnp.int32) * page_size + (pos % page_size).astype(jnp.int32)
+    return rows if positions.ndim == 2 else rows[:, 0]
+
+
+def gather_rows(pool, rows):
+    """pool: (pool_tokens, ...); rows: (B, L) -> (B, L, ...).
+
+    Out-of-range rows (sentinel blocks) read as zero; callers mask them by
+    validity (``position < length``) so the fill value never reaches softmax.
+    """
+    return pool.at[rows].get(mode="fill", fill_value=0)
+
+
+def scatter_rows(pool, rows, values, valid=None):
+    """Write rows into the pool; invalid rows are dropped exactly.
+
+    pool: (pool_tokens, ...); rows: (N,) int32; values: (N, ...) matching
+    pool's trailing dims; valid: optional (N,) bool — False entries are
+    redirected out of range and dropped (mode='drop'), leaving the pool
+    untouched. Distinct sequences always target distinct physical blocks
+    (allocator invariant), so a single scatter has no write conflicts.
+    """
+    if valid is not None:
+        rows = jnp.where(valid, rows, pool.shape[0])
+    return pool.at[rows].set(values.astype(pool.dtype), mode="drop")

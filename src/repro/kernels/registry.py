@@ -9,13 +9,25 @@ all route through the dispatch tables below instead of carrying their own
 string-dispatch, so config-driven impl/variant selection behaves identically
 in train, serve, and bench.
 
-Three tables, one per calling convention:
+Five tables, one per calling convention:
 
   full sequence   fn(q, k, v, *, spec, causal, scale)       -> (B, H, Sq, Dv)
   chunked prefill fn(q, k, v, *, spec, scale,
                      q_positions, kv_positions, kv_valid)   -> (B, H, C, Dv)
   decode          fn(q, k_cache, v_cache, lengths,
                      *, spec, scale)                        -> (B, H, Dv)
+  paged prefill   fn(q, k_chunk, v_chunk, k_pool, v_pool,
+                     rows, *, spec, scale, q_positions,
+                     chunk_valid, lengths)                  -> (B, H, C, Dv)
+  paged decode    fn(q, k_pool, v_pool, rows, lengths,
+                     *, spec, scale)                        -> (B, H, Dv)
+
+The paged conventions (DESIGN.md §7) take KV as a flat physical token pool
+``(pool_tokens, Hkv, ·)`` plus ``rows (B, L)`` — per-sequence physical row
+indices in logical position order, derived from the block table by
+``repro.kernels.paged.slot_rows`` — instead of per-slot contiguous caches.
+Position ``j`` of sequence ``b`` lives at ``rows[b, j]``; masking stays
+purely positional (``j < lengths[b]``, window by ``lengths - j``).
 
 Built-in implementations live in ``repro.core.attention`` and register
 themselves on import; new backends (e.g. a Pallas prefill kernel) register
@@ -38,6 +50,7 @@ class AttentionSpec:
     impl: str = "flash_jnp"          # ref | flash_jnp | pallas | ...
     decode_impl: str | None = None   # xla | pallas | ...
     prefill_impl: str | None = None  # masked_xla | ...
+    paged_impl: str | None = None    # gather_xla | ... (prefill and decode)
     variant: str = "exact"           # exact | expmul
     use_ste: bool = False            # straight-through grads for expmul
     window: int | None = None        # local attention span
@@ -55,6 +68,9 @@ class AttentionSpec:
     def resolved_prefill_impl(self) -> str:
         return self.prefill_impl or "masked_xla"
 
+    def resolved_paged_impl(self) -> str:
+        return self.paged_impl or "gather_xla"
+
     @classmethod
     def from_config(cls, cfg, *, window=None, variant=None,
                     use_ste=False) -> "AttentionSpec":
@@ -63,6 +79,7 @@ class AttentionSpec:
             impl=cfg.attention_impl,
             decode_impl=cfg.attention_decode_impl,
             prefill_impl=cfg.attention_prefill_impl,
+            paged_impl=cfg.attention_paged_impl,
             variant=variant if variant is not None else cfg.attention_variant,
             use_ste=use_ste,
             window=window,
@@ -79,6 +96,8 @@ class AttentionSpec:
 _ATTENTION_IMPLS: dict[str, object] = {}
 _PREFILL_IMPLS: dict[str, object] = {}
 _DECODE_IMPLS: dict[str, object] = {}
+_PAGED_PREFILL_IMPLS: dict[str, object] = {}
+_PAGED_DECODE_IMPLS: dict[str, object] = {}
 
 
 def register_attention(name: str):
@@ -98,6 +117,20 @@ def register_prefill(name: str):
 def register_decode(name: str):
     def deco(fn):
         _DECODE_IMPLS[name] = fn
+        return fn
+    return deco
+
+
+def register_paged_prefill(name: str):
+    def deco(fn):
+        _PAGED_PREFILL_IMPLS[name] = fn
+        return fn
+    return deco
+
+
+def register_paged_decode(name: str):
+    def deco(fn):
+        _PAGED_DECODE_IMPLS[name] = fn
         return fn
     return deco
 
@@ -149,3 +182,38 @@ def dispatch_decode(spec: AttentionSpec, q, k_cache, v_cache, lengths, *,
     """Single-token decode. q: (B,H,D); caches: (B,Hkv,S,·); lengths: (B,)."""
     fn = _lookup(_DECODE_IMPLS, spec.resolved_decode_impl(), "decode")
     return fn(q, k_cache, v_cache, lengths, spec=spec, scale=scale)
+
+
+def dispatch_paged_prefill(spec: AttentionSpec, q, k_chunk, v_chunk, k_pool,
+                           v_pool, rows, *, q_positions, chunk_valid, lengths,
+                           scale=None):
+    """Chunked prefill against a paged KV pool (DESIGN.md §7).
+
+    q: (B, H, C, D) chunk queries; k_chunk/v_chunk: (B, Hkv, C, ·) this
+    chunk's fresh KV (not yet in the pool); k_pool/v_pool: (pool_tokens,
+    Hkv, ·) flat physical pools; rows: (B, L) physical rows of logical
+    positions 0..L-1 (sentinel rows read as zero and are masked);
+    q_positions: (B, C) absolute chunk positions; chunk_valid: (B, C) bool;
+    lengths: (B,) tokens already resident. The implementation gathers the
+    history through ``rows`` and masks positionally exactly like the
+    contiguous prefill path.
+    """
+    fn = _lookup(_PAGED_PREFILL_IMPLS, spec.resolved_paged_impl(),
+                 "paged prefill")
+    return fn(q, k_chunk, v_chunk, k_pool, v_pool, rows, spec=spec,
+              scale=scale, q_positions=q_positions, chunk_valid=chunk_valid,
+              lengths=lengths)
+
+
+def dispatch_paged_decode(spec: AttentionSpec, q, k_pool, v_pool, rows,
+                          lengths, *, scale=None):
+    """Single-token decode against a paged KV pool.
+
+    q: (B, H, D); pools: (pool_tokens, Hkv, ·); rows: (B, L) physical rows
+    in logical position order (the current token's KV must already be
+    written); lengths: (B,) valid entries *including* the current token.
+    ``spec.window`` masks positions below ``lengths - window``.
+    """
+    fn = _lookup(_PAGED_DECODE_IMPLS, spec.resolved_paged_impl(),
+                 "paged decode")
+    return fn(q, k_pool, v_pool, rows, lengths, spec=spec, scale=scale)

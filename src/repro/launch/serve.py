@@ -1,7 +1,8 @@
 """Serving launcher: chunked prefill + continuous decode batching.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
-      --requests 8 --max-new 32 --chunk 32 [--variant expmul]
+      --requests 8 --max-new 32 --chunk 32 [--variant expmul] \
+      [--kv-layout paged --page-size 16 --pool-blocks 0]
 """
 from __future__ import annotations
 
@@ -30,13 +31,22 @@ def main(argv=None):
                     help="fixed prompt length (0 = random 4..11)")
     ap.add_argument("--variant", default="expmul", choices=["exact", "expmul"])
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--kv-layout", default="contiguous",
+                    choices=["contiguous", "paged"])
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="tokens per KV block (0 = cfg.page_size)")
+    ap.add_argument("--pool-blocks", type=int, default=0,
+                    help="paged pool size (0 = fully provisioned)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke, dtype="float32",
                      param_dtype="float32", attention_variant=args.variant)
     params = init_model(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(params, cfg, slots=args.slots, max_len=args.max_len,
-                      chunk_size=args.chunk, temperature=args.temperature)
+                      chunk_size=args.chunk, temperature=args.temperature,
+                      kv_layout=args.kv_layout,
+                      page_size=args.page_size or None,
+                      pool_blocks=args.pool_blocks or None)
     rng = np.random.default_rng(0)
     reqs = [
         eng.submit(
@@ -49,10 +59,15 @@ def main(argv=None):
     t0 = time.time()
     eng.run()
     dt = time.time() - t0
-    print(f"variant={args.variant} requests={len(reqs)} chunk={args.chunk} "
+    print(f"variant={args.variant} kv={args.kv_layout} "
+          f"requests={len(reqs)} chunk={args.chunk} "
           f"steps={eng.ticks} (prefill {eng.prefill_steps} / decode "
           f"{eng.decode_steps}) generated={eng.tokens_generated} tokens "
           f"({eng.tokens_generated / dt:.1f} tok/s)")
+    if args.kv_layout == "paged":
+        st = eng.memory_stats()
+        print(f"  KV: {st['kv_peak_used_tokens']}/{st['kv_reserved_tokens']} "
+              f"peak/reserved tokens, {st['preemptions']} preemptions")
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt[:4]={r.prompt[:4]} -> out[:8]={r.out[:8]}")
     return reqs

@@ -9,10 +9,13 @@ import jax
 import jax.numpy as jnp
 
 import repro.core.attention  # noqa: F401 — registers the built-in backends
+from repro.kernels.paged import scatter_rows
 from repro.kernels.registry import (
     AttentionSpec,
     dispatch_attention,
     dispatch_decode,
+    dispatch_paged_decode,
+    dispatch_paged_prefill,
     dispatch_prefill,
 )
 from repro.layers.common import dense_init
@@ -141,6 +144,84 @@ def attn_decode_step(params, cache, x1, cfg, lengths, *, write_pos=None,
     )
     out = jnp.einsum("bhk,hkd->bd", o, params["wo"])
     return {"k": k_cache, "v": v_cache}, out
+
+
+def attn_init_paged_cache(cfg, pool_tokens, dtype):
+    """Flat-pool KV cache: one physical row per pooled token (DESIGN.md §7).
+
+    Unlike the contiguous per-slot cache there is no batch axis — all
+    sequences share the pool and address it through their block tables.
+    Windowed layers use the same layout (absolute positions, window enforced
+    by masking) so one block table per sequence serves every layer.
+    """
+    hd = cfg.resolved_head_dim()
+    return {
+        "k": jnp.zeros((pool_tokens, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((pool_tokens, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+def attn_paged_decode_step(params, pool, x1, cfg, lengths, rows, write_row,
+                           *, window=None):
+    """Single-token decode through the block table.
+
+    x1: (B, D); lengths: (B,) absolute position of the new token; rows:
+    (B, L) physical rows of logical positions 0..L-1 (from ``slot_rows``);
+    write_row: (B,) physical row of position ``lengths`` (from
+    ``token_rows``). The new token's KV is scattered into the pool first,
+    then attention gathers the history through ``rows`` — idle slots carry
+    sentinel rows, so their writes drop and their scores are fully masked.
+    """
+    q = jnp.einsum("bd,dhk->bhk", x1, params["wq"])
+    k = jnp.einsum("bd,dhk->bhk", x1, params["wk"])
+    v = jnp.einsum("bd,dhk->bhk", x1, params["wv"])
+    if "bq" in params:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = apply_rope(q[:, :, None, :], lengths[:, None, None], cfg.rope_base)[:, :, 0]
+    k = apply_rope(k[:, :, None, :], lengths[:, None, None], cfg.rope_base)[:, :, 0]
+    k_pool = scatter_rows(pool["k"], write_row, k)
+    v_pool = scatter_rows(pool["v"], write_row, v)
+    o = dispatch_paged_decode(
+        AttentionSpec.from_config(cfg, window=window), q, k_pool, v_pool,
+        rows, lengths + 1,
+    )
+    out = jnp.einsum("bhk,hkd->bd", o, params["wo"])
+    return {"k": k_pool, "v": v_pool}, out
+
+
+def attn_paged_prefill_step(params, pool, x, cfg, lengths, n_valid, rows,
+                            chunk_rows, *, window=None):
+    """Chunked prefill through the block table.
+
+    x: (B, C, D) chunk; rows: (B, L) physical rows of the resident history;
+    chunk_rows: (B, C) physical rows where this chunk's tokens land. The
+    chunk attends to [gathered history ++ chunk] with positional masking
+    (exactly the contiguous concat form), then its valid tokens are
+    scattered into the pool. Every logical position owns a distinct physical
+    row, so there is no rolling-buffer overwrite hazard even for windowed
+    layers (DESIGN.md §7).
+    """
+    B, C, _ = x.shape
+    idx = jnp.arange(C)[None, :]
+    positions = lengths[:, None] + idx                       # (B, C) absolute
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    chunk_valid = idx < n_valid[:, None]
+
+    o = dispatch_paged_prefill(
+        AttentionSpec.from_config(cfg, window=window), q, k, v,
+        pool["k"], pool["v"], rows, q_positions=positions,
+        chunk_valid=chunk_valid, lengths=lengths,
+    )
+    out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+
+    def flat(t):  # (B, Hkv, C, hd) -> (B*C, Hkv, hd) token-major for scatter
+        return jnp.moveaxis(t, 1, 2).reshape(B * C, t.shape[1], t.shape[-1])
+    return {
+        "k": scatter_rows(pool["k"], chunk_rows.reshape(-1), flat(k),
+                          chunk_valid.reshape(-1)),
+        "v": scatter_rows(pool["v"], chunk_rows.reshape(-1), flat(v),
+                          chunk_valid.reshape(-1)),
+    }, out
 
 
 def chunk_write(buf, new, positions, gate, *, axis=2):

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core.attention  # noqa: F401 — registers the built-in backends
+from repro.kernels.paged import gather_rows, scatter_rows
 from repro.kernels.registry import (
     AttentionSpec,
     dispatch_attention,
@@ -129,6 +130,100 @@ def _expand_latents(params, kv_lat, k_rope, cfg):
         k_rope[:, None], (B, cfg.num_heads, S, m.qk_rope_dim)
     )
     return jnp.concatenate([k_nope, k_rope], axis=-1), v
+
+
+def mla_init_paged_cache(cfg, pool_tokens, dtype):
+    """Flat-pool latent cache (DESIGN.md §7): the pool stores the *latents*
+    (kv_lora_rank + qk_rope_dim per physical row), preserving the MLA memory
+    win — paging and latent compression compose."""
+    m = cfg.mla
+    return {
+        "kv_lat": jnp.zeros((pool_tokens, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((pool_tokens, m.qk_rope_dim), dtype),
+    }
+
+
+def mla_paged_decode_step(params, pool, x1, cfg, lengths, rows, write_row):
+    """Single-token MLA decode through the block table.
+
+    Latents are scattered into the pool at ``write_row``, the history is
+    gathered through ``rows`` (logical position order), then expanded to
+    full K/V exactly as the contiguous path — so the attention core sees
+    the same operands and the registry's exact/expmul selection applies
+    unchanged. The expanded K is rebuilt per step (never a ring buffer):
+    xla decode path, as in ``mla_decode_step``.
+    """
+    m = cfg.mla
+    B = x1.shape[0]
+    x = x1[:, None, :]
+    pos = lengths[:, None]
+    q, _, _, kv_lat, k_rope_raw = _mla_qkv(params, x, cfg, pos)
+    q1 = q[:, :, 0]                                   # (B, H, qk_head)
+
+    k_rope_new = apply_rope(
+        k_rope_raw[:, None, :, :], pos[:, None], cfg.rope_base)[:, 0, 0]
+    kv_lat_pool = scatter_rows(pool["kv_lat"], write_row, kv_lat[:, 0])
+    k_rope_pool = scatter_rows(pool["k_rope"], write_row, k_rope_new)
+
+    kv_lat_c = gather_rows(kv_lat_pool, rows)         # (B, L, rank)
+    k_rope_c = gather_rows(k_rope_pool, rows)         # (B, L, rope)
+    k, v = _expand_latents(params, kv_lat_c, k_rope_c, cfg)
+    scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    spec = AttentionSpec.from_config(cfg).replace(decode_impl="xla")
+    o = dispatch_decode(spec, q1, k, v, lengths + 1, scale=scale)
+    out = jnp.einsum("bhk,hkd->bd", o, params["wo"])
+    return {"kv_lat": kv_lat_pool, "k_rope": k_rope_pool}, out
+
+
+def mla_paged_prefill_step(params, pool, x, cfg, lengths, n_valid, rows,
+                           chunk_rows):
+    """Chunked MLA prefill through the block table.
+
+    The resident history's latents are gathered through ``rows`` and
+    expanded once, the chunk attends to [expanded history ++ chunk] with
+    positional masking (the expansion happens before the core, matching the
+    contiguous ``mla_prefill_step``), and the chunk's latents are scattered
+    into the pool.
+    """
+    if cfg.window:
+        raise NotImplementedError("windowed MLA chunked prefill")
+    m = cfg.mla
+    B, C, _ = x.shape
+    idx = jnp.arange(C)[None, :]
+    positions = lengths[:, None] + idx
+    q, k_chunk, v_chunk, kv_lat, k_rope_raw = _mla_qkv(params, x, cfg,
+                                                       positions)
+    chunk_valid = idx < n_valid[:, None]
+
+    L = rows.shape[1]
+    k_cache, v_cache = _expand_latents(
+        params, gather_rows(pool["kv_lat"], rows),
+        gather_rows(pool["k_rope"], rows), cfg,
+    )
+    k_all = jnp.concatenate([k_cache, k_chunk], axis=2)
+    v_all = jnp.concatenate([v_cache, v_chunk], axis=2)
+    hist_pos = jnp.broadcast_to(jnp.arange(L)[None, :], (B, L))
+    kv_positions = jnp.concatenate([hist_pos, positions], axis=1)
+    kv_valid = jnp.concatenate(
+        [hist_pos < lengths[:, None], chunk_valid], axis=1)
+
+    scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    o = dispatch_prefill(
+        AttentionSpec.from_config(cfg), q, k_all, v_all, scale=scale,
+        q_positions=positions, kv_positions=kv_positions, kv_valid=kv_valid,
+    )
+    out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
+
+    k_rope_chunk = apply_rope(
+        k_rope_raw[:, None, :, :], positions[:, None], cfg.rope_base)[:, 0]
+    flat_rows = chunk_rows.reshape(-1)
+    flat_valid = chunk_valid.reshape(-1)
+    return {
+        "kv_lat": scatter_rows(pool["kv_lat"], flat_rows,
+                               kv_lat.reshape(B * C, -1), flat_valid),
+        "k_rope": scatter_rows(pool["k_rope"], flat_rows,
+                               k_rope_chunk.reshape(B * C, -1), flat_valid),
+    }, out
 
 
 def mla_prefill_step(params, cache, x, cfg, lengths, n_valid):

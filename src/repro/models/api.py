@@ -23,11 +23,15 @@ from repro.layers.attention_layer import (
 from repro.layers.common import dense_init, make_norm
 from repro.layers.embedding import embed_apply, embed_init, logits_apply
 from repro.layers.mlp import mlp_apply, mlp_init
+from repro.kernels.paged import slot_rows, token_rows
 from repro.models.blocks import (
     block_apply,
     block_decode_step,
     block_init,
     block_init_cache,
+    block_init_paged_cache,
+    block_paged_decode_step,
+    block_paged_prefill,
     block_prefill,
 )
 
@@ -251,6 +255,31 @@ def init_decode_state(cfg: ModelConfig, batch, max_len, *, enc_len=None):
     }
 
 
+def init_paged_state(cfg: ModelConfig, slots, pool_blocks, page_size):
+    """Decode state with paged attention caches (DESIGN.md §7).
+
+    Attention-kind caches become flat physical pools of
+    ``pool_blocks * page_size`` token rows shared by all sequences (no slot
+    axis — block tables map logical positions to rows); recurrent kinds keep
+    their per-slot O(1) state exactly as in ``init_decode_state``.
+    """
+    if cfg.encoder_layers:
+        raise NotImplementedError("paged serving targets decoder-only "
+                                  "configs; encoder-decoder serving uses "
+                                  "the contiguous layout")
+    dt = _dtype(cfg)
+    pool_tokens = pool_blocks * page_size
+    nu = _n_units(cfg)
+
+    def stacked_cache(kind):
+        one = block_init_paged_cache(cfg, kind, pool_tokens, slots, dt)
+        return jax.tree.map(lambda l: jnp.zeros((nu,) + l.shape, l.dtype) + l, one)
+
+    return {
+        "caches": tuple(stacked_cache(kind) for kind in _unit(cfg)),
+    }
+
+
 def encode_for_decode(params, state, frontend_embeds, enc_lengths, cfg):
     """Run the encoder once and stash per-layer cross K/V (enc-dec serving)."""
     _, norm = make_norm(cfg.norm)
@@ -269,6 +298,41 @@ def encode_for_decode(params, state, frontend_embeds, enc_lengths, cfg):
     state["cross_kv"] = (ks, vs)
     state["enc_len"] = enc_lengths
     return state
+
+
+def _scan_unit_caches(params_units, caches, x, cfg, step_fn):
+    """Run the unit stack with the KV caches riding the scan carry.
+
+    Caches are updated with dynamic-update-slice at the unit index: with
+    donated state buffers this is a true in-place update (the previous
+    xs->ys restacking materialized the whole stacked cache twice per token —
+    §Perf gemma decode). ``step_fn(p_block, cache_block, x, kind) ->
+    (new_cache, x)`` supplies the per-block computation; prefill, decode,
+    and their paged variants all share this scan.
+    """
+    def unit_body(carry, xs):
+        x, caches = carry
+        p_l, idx = xs
+        new_caches = []
+        for pos, kind in enumerate(_unit(cfg)):
+            c_l = jax.tree.map(
+                lambda buf: jax.lax.dynamic_index_in_dim(
+                    buf, idx, 0, keepdims=False),
+                caches[pos],
+            )
+            c_new, x = step_fn(p_l[pos], c_l, x, kind)
+            new_caches.append(jax.tree.map(
+                lambda buf, n: jax.lax.dynamic_update_index_in_dim(
+                    buf, n.astype(buf.dtype), idx, 0),
+                caches[pos], c_new,
+            ))
+        return (x, tuple(new_caches)), None
+
+    (x, new_caches), _ = jax.lax.scan(
+        unit_body, (x, caches),
+        (params_units, jnp.arange(_n_units(cfg))),
+    )
+    return x, new_caches
 
 
 def prefill(params, state, tokens, lengths, n_valid, cfg: ModelConfig):
@@ -291,33 +355,73 @@ def prefill(params, state, tokens, lengths, n_valid, cfg: ModelConfig):
     B, C = tokens.shape
     x = embed_apply(params["embed"], tokens, cfg).astype(_dtype(cfg))
 
-    def unit_body(carry, xs):
-        x, caches = carry
-        p_l, idx = xs
-        new_caches = []
-        for pos, kind in enumerate(_unit(cfg)):
-            c_l = jax.tree.map(
-                lambda buf: jax.lax.dynamic_index_in_dim(
-                    buf, idx, 0, keepdims=False),
-                caches[pos],
-            )
-            c_new, x = block_prefill(p_l[pos], c_l, x, cfg, kind, lengths,
-                                     n_valid)
-            new_caches.append(jax.tree.map(
-                lambda buf, n: jax.lax.dynamic_update_index_in_dim(
-                    buf, n.astype(buf.dtype), idx, 0),
-                caches[pos], c_new,
-            ))
-        return (x, tuple(new_caches)), None
-
-    (x, new_caches), _ = jax.lax.scan(
-        unit_body, (x, state["caches"]),
-        (params["units"], jnp.arange(_n_units(cfg))),
+    x, new_caches = _scan_unit_caches(
+        params["units"], state["caches"], x, cfg,
+        lambda p, c, x, kind: block_prefill(p, c, x, cfg, kind, lengths,
+                                            n_valid),
     )
     x = norm(params["final_norm"], x)
     last = jnp.clip(n_valid - 1, 0, C - 1)
     x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
     logits = logits_apply(params["embed"], x_last, cfg)
+    return logits, {"caches": new_caches}
+
+
+def prefill_paged(params, state, tokens, lengths, n_valid, block_tables,
+                  cfg: ModelConfig, *, page_size):
+    """Chunked prefill against paged caches (DESIGN.md §7).
+
+    Same contract as ``prefill`` plus ``block_tables (B, max_blocks)``:
+    per-sequence physical block ids (sentinel = pool_blocks for unallocated
+    entries). All layers share one block table per sequence — every layer
+    stores the same logical positions — so the physical row indices are
+    computed once here and broadcast through the unit scan.
+    """
+    if cfg.encoder_layers:
+        raise NotImplementedError("paged prefill targets decoder-only "
+                                  "configs")
+    _, norm = make_norm(cfg.norm)
+    B, C = tokens.shape
+    x = embed_apply(params["embed"], tokens, cfg).astype(_dtype(cfg))
+    rows = slot_rows(block_tables, page_size)
+    positions = lengths[:, None] + jnp.arange(C)[None, :]
+    chunk_rows = token_rows(block_tables, positions, page_size)
+
+    x, new_caches = _scan_unit_caches(
+        params["units"], state["caches"], x, cfg,
+        lambda p, c, x, kind: block_paged_prefill(p, c, x, cfg, kind,
+                                                  lengths, n_valid, rows,
+                                                  chunk_rows),
+    )
+    x = norm(params["final_norm"], x)
+    last = jnp.clip(n_valid - 1, 0, C - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+    logits = logits_apply(params["embed"], x_last, cfg)
+    return logits, {"caches": new_caches}
+
+
+def decode_step_paged(params, state, tokens1, lengths, block_tables,
+                      cfg: ModelConfig, *, page_size):
+    """One serving step against paged caches: tokens1 (B,) -> logits, state.
+
+    Mirrors ``decode_step``'s carry-and-update scan; the only difference is
+    that attention-kind blocks scatter/gather through the block table.
+    """
+    if cfg.encoder_layers:
+        raise NotImplementedError("paged decode targets decoder-only configs")
+    _, norm = make_norm(cfg.norm)
+    x = embed_apply(params["embed"], tokens1[:, None], cfg)[:, 0].astype(_dtype(cfg))
+    rows = slot_rows(block_tables, page_size)
+    write_row = token_rows(block_tables, lengths, page_size)
+
+    x, new_caches = _scan_unit_caches(
+        params["units"], state["caches"], x, cfg,
+        lambda p, c, x, kind: block_paged_decode_step(p, c, x, cfg, kind,
+                                                      lengths, rows,
+                                                      write_row),
+    )
+    x = norm(params["final_norm"], x)
+    logits = logits_apply(params["embed"], x, cfg)
     return logits, {"caches": new_caches}
 
 
@@ -347,32 +451,10 @@ def decode_step(params, state, tokens1, lengths, cfg: ModelConfig):
         new_state = dict(state)
         new_state["caches"] = (c_new,)
     else:
-        # KV caches ride the scan CARRY and are updated with dynamic-update-
-        # slice at the unit index: with donated state buffers this is a true
-        # in-place update. (The previous xs->ys restacking materialized the
-        # whole stacked cache twice per token — §Perf gemma decode.)
-        def unit_body(carry, xs):
-            x, caches = carry
-            p_l, idx = xs
-            new_caches = []
-            for pos, kind in enumerate(_unit(cfg)):
-                c_l = jax.tree.map(
-                    lambda buf: jax.lax.dynamic_index_in_dim(
-                        buf, idx, 0, keepdims=False),
-                    caches[pos],
-                )
-                c_new, x = block_decode_step(p_l[pos], c_l, x, cfg, kind, lengths)
-                new_caches.append(jax.tree.map(
-                    lambda buf, n: jax.lax.dynamic_update_index_in_dim(
-                        buf, n.astype(buf.dtype), idx, 0),
-                    caches[pos], c_new,
-                ))
-            return (x, tuple(new_caches)), None
-
-        n_units = _n_units(cfg)
-        (x, new_caches), _ = jax.lax.scan(
-            unit_body, (x, state["caches"]),
-            (params["units"], jnp.arange(n_units)),
+        x, new_caches = _scan_unit_caches(
+            params["units"], state["caches"], x, cfg,
+            lambda p, c, x, kind: block_decode_step(p, c, x, cfg, kind,
+                                                    lengths),
         )
         new_state = {"caches": new_caches}
 

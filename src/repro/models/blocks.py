@@ -12,6 +12,9 @@ from repro.layers.attention_layer import (
     attn_decode_step,
     attn_init,
     attn_init_cache,
+    attn_init_paged_cache,
+    attn_paged_decode_step,
+    attn_paged_prefill_step,
     attn_prefill_step,
 )
 from repro.layers.common import make_norm
@@ -20,6 +23,9 @@ from repro.layers.mla import (
     mla_decode_step,
     mla_init,
     mla_init_cache,
+    mla_init_paged_cache,
+    mla_paged_decode_step,
+    mla_paged_prefill_step,
     mla_prefill_step,
 )
 from repro.layers.mlp import mlp_apply, mlp_init
@@ -109,6 +115,78 @@ def block_init_cache(cfg, kind, batch, max_len, dtype):
     if kind == "slstm":
         return slstm_init_cache(cfg, batch, dtype)
     raise ValueError(kind)
+
+
+def block_init_paged_cache(cfg, kind, pool_tokens, slots, dtype):
+    """Paged cache for one block kind (DESIGN.md §7).
+
+    Attention kinds share the flat physical token pool (no batch axis —
+    sequences address it through block tables); recurrent kinds keep their
+    O(1) per-slot state and bypass paging entirely.
+    """
+    if kind == "attn":
+        if cfg.mla:
+            return mla_init_paged_cache(cfg, pool_tokens, dtype)
+        return attn_init_paged_cache(cfg, pool_tokens, dtype)
+    return block_init_cache(cfg, kind, slots, 0, dtype)
+
+
+def block_paged_prefill(params, cache, x, cfg, kind, lengths, n_valid, rows,
+                        chunk_rows):
+    """Chunked prefill through one residual block, paged KV variant.
+
+    rows: (B, L) physical rows of the resident history; chunk_rows: (B, C)
+    physical rows for this chunk — both derived from the slot's block table
+    (identical for every layer). Recurrent kinds ignore them and run the
+    same gated single-token scan as the contiguous path.
+    """
+    _, norm = make_norm(cfg.norm)
+    if kind != "attn":
+        return block_prefill(params, cache, x, cfg, kind, lengths, n_valid)
+    h = norm(params["norm_mix"], x)
+    if cfg.mla:
+        cache, h = mla_paged_prefill_step(params["mix"], cache, h, cfg,
+                                          lengths, n_valid, rows, chunk_rows)
+    else:
+        window = cfg.window if cfg.window else None
+        cache, h = attn_paged_prefill_step(params["mix"], cache, h, cfg,
+                                           lengths, n_valid, rows, chunk_rows,
+                                           window=window)
+    x = x + h
+    if "ffn" in params:
+        h = norm(params["norm_ffn"], x)
+        if cfg.moe is not None:
+            h = moe_apply(params["ffn"], h, cfg, impl="scatter")
+        else:
+            h = mlp_apply(params["ffn"], h, cfg.activation)
+        x = x + h
+    return cache, x
+
+
+def block_paged_decode_step(params, cache, x1, cfg, kind, lengths, rows,
+                            write_row):
+    """Single-token decode through one residual block, paged KV variant."""
+    if kind != "attn":
+        return block_decode_step(params, cache, x1, cfg, kind, lengths)
+    _, norm = make_norm(cfg.norm)
+    h = norm(params["norm_mix"], x1)
+    if cfg.mla:
+        cache, h = mla_paged_decode_step(params["mix"], cache, h, cfg,
+                                         lengths, rows, write_row)
+    else:
+        window = cfg.window if cfg.window else None
+        cache, h = attn_paged_decode_step(params["mix"], cache, h, cfg,
+                                          lengths, rows, write_row,
+                                          window=window)
+    x1 = x1 + h
+    if "ffn" in params:
+        h = norm(params["norm_ffn"], x1)
+        if cfg.moe is not None:
+            h = moe_apply(params["ffn"], h[:, None, :], cfg, impl="scatter")[:, 0]
+        else:
+            h = mlp_apply(params["ffn"], h, cfg.activation)
+        x1 = x1 + h
+    return cache, x1
 
 
 def block_prefill(params, cache, x, cfg, kind, lengths, n_valid):

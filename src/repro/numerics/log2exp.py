@@ -1,19 +1,46 @@
 """Fixed-point Log2Exp quantization and the ExpMul primitive (paper §IV-B).
 
-The paper replaces ``e^x * V`` (x <= 0) with::
+This module is the normative statement of the **ExpMul numerics contract**
+(DESIGN.md §2). The paper replaces ``e^x * V`` (x <= 0) with::
 
     x_hat = Fixed(Clip(x, -15, 0))                    # 16-bit, 10 frac bits
     L_hat = -round(x_hat + x_hat>>1 - x_hat>>4)       # ~= round(-x*log2(e))
     out   = Float(S_V, E_V - L_hat, M_V)              # exponent-field subtract
 
-i.e. ``e^x`` is quantized to the nearest power of two (with the shift-add
-constant 1.4375 approximating log2(e)=1.442695), and the multiply becomes an
-integer subtraction on the float exponent field. Underflow flushes to zero.
+i.e. ``e^x`` is quantized to the nearest power of two and the multiply
+becomes an integer subtraction on the float exponent field.
+
+Contract, clause by clause:
+
+* **Fixed-point format.** After clipping, ``x`` is rounded to nearest into
+  16-bit two's-complement fixed point with 10 fraction bits (values in
+  ``[-15*1024, 0]``; carried in int32 lanes without changing arithmetic).
+* **Clip range ``[-15, 0]``.** FlashAttention only ever exponentiates
+  ``s - m <= 0``; inputs below -15 saturate at the clip, giving
+  ``L_hat = 22`` (``2^-22 ~= 2.4e-7``) — already below bf16 resolution of
+  any accumulator they feed.
+* **Shift-add identity.** ``x*log2(e)`` is approximated by
+  ``x + x>>1 - x>>4 = 1.4375*x`` (vs log2(e) = 1.442695...), with
+  *arithmetic* shifts (floor on negatives, exactly as ASIC shifters
+  behave), then round-half-up of the negated accumulator to the integer
+  ``L_hat >= 0``.
+* **Underflow / flush rules.** In ``apply_pow2_scale`` a biased exponent
+  that reaches <= 0 flushes the result to zero (sign and mantissa are
+  otherwise untouched); denormal inputs flush to zero. In ``pow2_neg`` an
+  assembled exponent <= 0 yields exactly 0.0. ``x = 0`` is the identity
+  (``L_hat = 0``).
+* **Max relative error.** Over ``x in [-15, 0]`` (float32, measured on a
+  2M-point grid) ``|2^-L_hat - e^x| / e^x`` peaks at **0.493** near
+  x = -14.96 (power-of-two rounding contributes up to ~0.41; the
+  1.4375-vs-log2(e) slope drift adds ~0.1 bit by x = -15) with mean 0.18.
+  Softmax renormalization cancels most of it: end-task fidelity is
+  established in ``benchmarks/table1_fidelity.py``, not per element.
 
 These are the *reference semantics* shared bit-exactly by:
   * the pure-jnp oracle  (``repro/kernels/expmul/ref.py``)
   * the Pallas TPU kernel (``repro/kernels/expmul/expmul.py``)
   * the fused FlashAttention-2 kernels (``repro/kernels/flash``)
+  * the registry decode/prefill/paged paths (``repro/core/attention.py``)
 
 All functions are jit-safe and CPU/TPU portable.
 """

@@ -1,4 +1,6 @@
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.paged import BlockPool, PoolStats, blocks_for
 from repro.serve.sampling import sample_token
 
-__all__ = ["ServeEngine", "sample_token"]
+__all__ = ["BlockPool", "PoolStats", "Request", "ServeEngine", "blocks_for",
+           "sample_token"]

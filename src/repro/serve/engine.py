@@ -1,4 +1,5 @@
-"""Slot-based serving engine: chunked prefill + continuous decode batching.
+"""Slot-based serving engine: chunked prefill + continuous decode batching
+over a contiguous or paged KV cache.
 
 A fixed pool of ``slots`` shares two compiled graphs (DESIGN.md §6):
 
@@ -20,8 +21,24 @@ chunk size is static, so each graph compiles once). The attention variant
 (exact vs the paper's ExpMul) comes from the model config via the backend
 registry.
 
-``chunk_size=1`` falls back to the legacy behavior: prompts are
-teacher-forced one token per tick through the decode graph.
+``kv_layout`` selects the KV memory model (DESIGN.md §7):
+
+  "contiguous"   one max_len-sized cache region per slot — memory scales
+                 with slots x max_len regardless of actual lengths.
+  "paged"        attention caches are flat physical block pools shared by
+                 all slots; a host-side ``BlockPool`` grows each sequence's
+                 block table on demand. When a reservation cannot fit, the
+                 youngest active request is preempted: its blocks are
+                 evicted and it is requeued with prompt + generated tokens
+                 as the new teacher-forced prefix (recompute-style
+                 resumption — deterministic at temperature 0, so token
+                 streams are unchanged). Recurrent block kinds keep per-slot
+                 O(1) state and bypass paging.
+
+Both layouts run the same scheduler and sampling sequence, so with an
+adequately sized pool the paged engine emits bit-identical token streams to
+the contiguous one. ``chunk_size=1`` falls back to the legacy behavior:
+prompts are teacher-forced one token per tick through the decode graph.
 """
 from __future__ import annotations
 
@@ -31,7 +48,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.api import decode_step, init_decode_state, prefill
+from repro.models.api import (
+    decode_step,
+    decode_step_paged,
+    init_decode_state,
+    init_paged_state,
+    prefill,
+    prefill_paged,
+)
+from repro.serve.paged import BlockPool, blocks_for
 from repro.serve.sampling import sample_token
 
 
@@ -42,14 +67,22 @@ class Request:
     max_new: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
-    pos: int = 0            # prompt tokens already consumed (prefill cursor)
+    pos: int = 0            # prefill cursor into ``prefill_toks``
     first_token_step: int | None = None  # engine step that produced out[0]
+    preemptions: int = 0    # times this request was evicted and requeued
+    admit_order: int = -1   # admission sequence number (victim selection)
+    # teacher-forced prefix: the prompt, extended with already-generated
+    # tokens after a preemption (recompute-style resumption)
+    prefill_toks: list = dataclasses.field(default_factory=list)
 
 
 class ServeEngine:
     def __init__(self, params, cfg, *, slots: int = 8, max_len: int = 512,
                  chunk_size: int = 64, temperature: float = 0.0,
-                 seed: int = 0):
+                 seed: int = 0, kv_layout: str = "contiguous",
+                 page_size: int | None = None,
+                 pool_blocks: int | None = None):
+        assert kv_layout in ("contiguous", "paged"), kv_layout
         self.params = params
         self.cfg = cfg
         self.slots = slots
@@ -57,49 +90,111 @@ class ServeEngine:
         self.chunk_size = max(1, int(chunk_size))
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
-        self.state = init_decode_state(cfg, slots, max_len)
+        self.kv_layout = kv_layout
+        self.paged = kv_layout == "paged"
+        if self.paged:
+            ps = int(page_size or cfg.page_size)
+            max_blocks = blocks_for(max_len, ps)
+            n_pool = int(pool_blocks or cfg.pool_blocks or slots * max_blocks)
+            self.page_size = ps
+            self.pool = BlockPool(n_pool, ps, slots, max_blocks)
+            self.state = init_paged_state(cfg, slots, n_pool, ps)
+            self._decode = jax.jit(
+                lambda params, state, toks, lens, bt: decode_step_paged(
+                    params, state, toks, lens, bt, self.cfg, page_size=ps)
+            )
+            self._prefill = jax.jit(
+                lambda params, state, toks, lens, nv, bt: prefill_paged(
+                    params, state, toks, lens, nv, bt, self.cfg,
+                    page_size=ps)
+            )
+        else:
+            self.page_size = 0
+            self.pool = None
+            self.state = init_decode_state(cfg, slots, max_len)
+            self._decode = jax.jit(
+                lambda params, state, toks, lens: decode_step(
+                    params, state, toks, lens, self.cfg)
+            )
+            self._prefill = jax.jit(
+                lambda params, state, toks, lens, nv: prefill(
+                    params, state, toks, lens, nv, self.cfg)
+            )
         self.lengths = np.zeros((slots,), np.int32)
         self.cur_tok = np.zeros((slots,), np.int32)
         self.requests: list[Request | None] = [None] * slots
         self.queue: list[Request] = []
-        self._decode = jax.jit(
-            lambda params, state, toks, lens: decode_step(
-                params, state, toks, lens, self.cfg)
-        )
-        self._prefill = jax.jit(
-            lambda params, state, toks, lens, nv: prefill(
-                params, state, toks, lens, nv, self.cfg)
-        )
         self.ticks = 0            # total engine steps (prefill + decode)
         self.prefill_steps = 0
         self.decode_steps = 0
         self.prompt_tokens = 0    # prompt tokens absorbed via chunked prefill
+        self.recompute_tokens = 0  # generated tokens re-prefilled after preempt
         self.tokens_generated = 0
+        self.preemptions = 0
+        self._admit_seq = 0
+        self.peak_active_tokens = 0   # max over ticks of sum(active lengths)
+        self.peak_kv_used_tokens = 0  # max over ticks of resident KV tokens
 
+    # -- request lifecycle --------------------------------------------------
     def submit(self, prompt, max_new: int, rid: int | None = None) -> Request:
         prompt = list(prompt)
         assert 0 < len(prompt) <= self.max_len - 1, len(prompt)
         req = Request(rid if rid is not None else len(self.queue), prompt,
-                      max_new)
+                      max_new, prefill_toks=list(prompt))
         self.queue.append(req)
         return req
+
+    def _first_take(self, req: Request) -> int:
+        if self.chunk_size > 1:
+            return min(self.chunk_size, len(req.prefill_toks))
+        return 1
 
     def _admit(self):
         for s in range(self.slots):
             if self.requests[s] is None and self.queue:
+                if self.paged and not self.pool.can_fit(
+                        s, self._first_take(self.queue[0])):
+                    if self.pool.used_blocks == 0 and not any(
+                            r is not None for r in self.requests):
+                        # an empty pool can't hold even the first chunk:
+                        # waiting will never help — fail like _reserve does
+                        raise RuntimeError(
+                            f"KV pool too small: request {self.queue[0].rid} "
+                            f"needs {self._first_take(self.queue[0])} tokens "
+                            f"for its first chunk but the whole pool holds "
+                            f"{self.pool.pool_blocks * self.page_size}; "
+                            f"raise pool_blocks")
+                    break  # pool too tight right now; retry as blocks free
                 req = self.queue.pop(0)
+                if req.admit_order < 0:
+                    # seniority is assigned once and survives preemption:
+                    # a requeued request must outrank later arrivals, or two
+                    # requests that don't fit together evict each other
+                    # forever (oldest-first reservation + youngest victim)
+                    req.admit_order = self._admit_seq
+                    self._admit_seq += 1
                 self.requests[s] = req
                 self.lengths[s] = 0
-                self.cur_tok[s] = req.prompt[0]
+                self.cur_tok[s] = req.prefill_toks[0]
                 # NOTE: slot state is logically reset via lengths=0 (the
                 # attention mask hides stale cache rows); recurrent-state
                 # archs need a true reset, handled by zeroing below.
-                self.state = jax.tree.map(
-                    lambda l: l.at[:, s].set(0) if l.ndim >= 2 else l, self.state
-                ) if self._needs_state_reset() else self.state
+                self._reset_slot_state(s)
 
-    def _needs_state_reset(self):
-        return any(k in ("rglru", "mlstm", "slstm") for k in self.cfg.block_pattern)
+    def _reset_slot_state(self, s):
+        """Zero recurrent per-slot state on admission. Only recurrent-kind
+        caches are touched: attention caches are masked by lengths (and in
+        paged mode their second axis is physical pool rows, not slots)."""
+        recurrent = [i for i, k in enumerate(self.cfg.block_pattern)
+                     if k in ("rglru", "mlstm", "slstm")]
+        if not recurrent:
+            return
+        caches = list(self.state["caches"])
+        for i in recurrent:
+            caches[i] = jax.tree.map(lambda l: l.at[:, s].set(0), caches[i])
+        state = dict(self.state)
+        state["caches"] = tuple(caches)
+        self.state = state
 
     def _finish_or_continue(self, s, tok):
         """Record a sampled token for slot s; free the slot when done."""
@@ -112,6 +207,61 @@ class ServeEngine:
         if len(req.out) >= req.max_new or self.lengths[s] >= self.max_len - 1:
             req.done = True
             self.requests[s] = None
+            if self.paged:
+                self.pool.free_slot(s)
+
+    # -- paged capacity management ------------------------------------------
+    def _preempt(self, s):
+        """Evict slot s and requeue its request for recompute-resumption."""
+        req = self.requests[s]
+        self.pool.evict_slot(s)
+        self.requests[s] = None
+        self.lengths[s] = 0
+        req.prefill_toks = list(req.prompt) + list(req.out)
+        req.pos = 0
+        req.preemptions += 1
+        self.preemptions += 1
+        self.queue.insert(0, req)  # resumes as soon as space frees up
+
+    def _pick_victim(self, exclude):
+        """Youngest active request (latest admitted) other than ``exclude``."""
+        best = None
+        for s in range(self.slots):
+            if s == exclude or self.requests[s] is None:
+                continue
+            if best is None or (self.requests[s].admit_order
+                                > self.requests[best].admit_order):
+                best = s
+        return best
+
+    def _take_for(self, s) -> int:
+        req = self.requests[s]
+        if self.chunk_size > 1 and req.pos < len(req.prefill_toks):
+            return min(self.chunk_size, len(req.prefill_toks) - req.pos)
+        return 1
+
+    def _reserve(self, active):
+        """Grow block tables to cover this tick's writes, oldest request
+        first; preempt youngest-first when the pool is exhausted. Returns
+        the surviving active slots."""
+        for s in sorted(active, key=lambda s: self.requests[s].admit_order):
+            if self.requests[s] is None:
+                continue  # preempted by an older request's reservation
+            target = int(self.lengths[s]) + self._take_for(s)
+            while not self.pool.alloc(s, target):
+                victim = self._pick_victim(exclude=s)
+                if victim is None:
+                    raise RuntimeError(
+                        f"KV pool exhausted: slot {s} needs {target} tokens "
+                        f"({blocks_for(target, self.page_size)} blocks, "
+                        f"pool={self.pool.pool_blocks}) with no one left "
+                        f"to evict; raise pool_blocks")
+                self._preempt(victim)
+        return [s for s in range(self.slots) if self.requests[s] is not None]
+
+    # -- engine steps -------------------------------------------------------
+    def _block_tables(self):
+        return jnp.asarray(self.pool.tables)
 
     def _prefill_tick(self, active):
         """One chunked step: prefilling slots absorb up to chunk_size prompt
@@ -121,17 +271,18 @@ class ServeEngine:
         nv = np.zeros((self.slots,), np.int32)
         for s in active:
             req = self.requests[s]
-            if req.pos < len(req.prompt):
-                take = min(C, len(req.prompt) - req.pos)
-                toks[s, :take] = req.prompt[req.pos:req.pos + take]
+            if req.pos < len(req.prefill_toks):
+                take = min(C, len(req.prefill_toks) - req.pos)
+                toks[s, :take] = req.prefill_toks[req.pos:req.pos + take]
             else:
                 take = 1
                 toks[s, 0] = self.cur_tok[s]
             nv[s] = take
-        logits, self.state = self._prefill(
-            self.params, self.state, jnp.asarray(toks),
-            jnp.asarray(self.lengths), jnp.asarray(nv),
-        )
+        args = (self.params, self.state, jnp.asarray(toks),
+                jnp.asarray(self.lengths), jnp.asarray(nv))
+        if self.paged:
+            args += (self._block_tables(),)
+        logits, self.state = self._prefill(*args)
         self.key, sk = jax.random.split(self.key)
         nxt = np.asarray(sample_token(sk, logits, temperature=self.temperature))
         self.ticks += 1
@@ -140,37 +291,53 @@ class ServeEngine:
             req = self.requests[s]
             take = int(nv[s])
             self.lengths[s] += take
-            if req.pos < len(req.prompt):       # was prefilling this step
+            if req.pos < len(req.prefill_toks):  # was prefilling this step
+                n_prompt = len(req.prompt)
+                recompute = max(0, min(req.pos + take, len(req.prefill_toks))
+                                - max(req.pos, n_prompt))
                 req.pos += take
-                self.prompt_tokens += take
-                if req.pos < len(req.prompt):
+                self.prompt_tokens += take - recompute
+                self.recompute_tokens += recompute
+                if req.pos < len(req.prefill_toks):
                     continue                    # still mid-prompt: no sample
             self._finish_or_continue(s, int(nxt[s]))
 
     def _decode_tick(self, active):
         """Legacy single-token step; with chunk_size=1 it also teacher-forces
         prompts (the pre-chunked-prefill behavior)."""
-        logits, self.state = self._decode(
-            self.params, self.state,
-            jnp.asarray(self.cur_tok), jnp.asarray(self.lengths),
-        )
+        args = (self.params, self.state,
+                jnp.asarray(self.cur_tok), jnp.asarray(self.lengths))
+        if self.paged:
+            args += (self._block_tables(),)
+        logits, self.state = self._decode(*args)
         self.key, sk = jax.random.split(self.key)
         nxt = np.asarray(sample_token(sk, logits, temperature=self.temperature))
         self.ticks += 1
         self.decode_steps += 1
         for s in active:
             req = self.requests[s]
-            if self.lengths[s] < len(req.prompt):
+            if self.lengths[s] < len(req.prefill_toks):
                 # the token written this tick was a prompt token (counted
                 # pre-increment so prompt[0] is included, matching prefill)
-                self.prompt_tokens += 1
+                if self.lengths[s] < len(req.prompt):
+                    self.prompt_tokens += 1
+                else:
+                    self.recompute_tokens += 1
             self.lengths[s] += 1
             req.pos = max(req.pos, int(self.lengths[s]))
             pos = int(self.lengths[s])
-            if pos < len(req.prompt):           # teacher-forcing (chunk=1)
-                self.cur_tok[s] = req.prompt[pos]
+            if pos < len(req.prefill_toks):     # teacher-forcing (chunk=1)
+                self.cur_tok[s] = req.prefill_toks[pos]
             else:
                 self._finish_or_continue(s, int(nxt[s]))
+
+    def _track_memory(self, active):
+        self.peak_active_tokens = max(
+            self.peak_active_tokens,
+            int(sum(self.lengths[s] for s in active)))
+        used = (self.pool.used_blocks * self.page_size if self.paged
+                else self.slots * self.max_len)
+        self.peak_kv_used_tokens = max(self.peak_kv_used_tokens, used)
 
     def tick(self):
         """Advance the engine by one step (prefill or decode)."""
@@ -178,15 +345,46 @@ class ServeEngine:
         active = [s for s in range(self.slots) if self.requests[s] is not None]
         if not active:
             return False
+        if self.paged:
+            active = self._reserve(active)
         prefilling = self.chunk_size > 1 and any(
-            self.requests[s].pos < len(self.requests[s].prompt) for s in active
+            self.requests[s].pos < len(self.requests[s].prefill_toks)
+            for s in active
         )
         if prefilling:
             self._prefill_tick(active)
         else:
             self._decode_tick(active)
+        self._track_memory(
+            [s for s in range(self.slots) if self.requests[s] is not None])
         return True
 
     def run(self):
         while self.tick() or self.queue:
             pass
+
+    # -- memory accounting (BENCH_serve.json) -------------------------------
+    def kv_reserved_tokens(self) -> int:
+        """KV token rows reserved up front (per attention layer)."""
+        if self.paged:
+            return self.pool.pool_blocks * self.page_size
+        return self.slots * self.max_len
+
+    def memory_stats(self) -> dict:
+        st = {
+            "kv_layout": self.kv_layout,
+            "kv_reserved_tokens": int(self.kv_reserved_tokens()),
+            "kv_peak_used_tokens": int(self.peak_kv_used_tokens),
+            "kv_peak_active_tokens": int(self.peak_active_tokens),
+            "kv_tokens_per_active_token": (
+                self.peak_kv_used_tokens / self.peak_active_tokens
+                if self.peak_active_tokens else 0.0),
+            "preemptions": int(self.preemptions),
+            "recompute_tokens": int(self.recompute_tokens),
+        }
+        if self.paged:
+            st["page_size"] = self.page_size
+            st["pool_blocks"] = self.pool.pool_blocks
+            st["evictions"] = self.pool.stats.evictions
+            st["alloc_failures"] = self.pool.stats.alloc_failures
+        return st

@@ -1,0 +1,130 @@
+"""Host-side paged KV-cache management: block pool + per-sequence block
+tables (DESIGN.md §7).
+
+This is the vLLM-style memory manager for the serving engine. Device caches
+are flat pools of ``pool_blocks * page_size`` physical token rows (see
+``repro.kernels.paged`` for the jit-traceable half); this module owns the
+*allocation* state — which physical blocks belong to which slot — entirely
+in numpy/python on the host:
+
+  * a free list of physical block ids (LIFO: freshly freed blocks are
+    reused first, keeping the hot working set small);
+  * one block table per engine slot, shape ``(slots, max_blocks_per_seq)``,
+    holding physical block ids in logical order. Every layer of the model
+    stores the same logical positions, so one table per sequence serves all
+    layers (they index their own pools with the same ids).
+
+Unallocated table entries hold the sentinel ``pool_blocks`` (one past the
+last block): every physical row derived from a sentinel is out of range, so
+device gathers read zeros (masked anyway) and device scatters drop — a
+freed slot can never corrupt the pool.
+
+Eviction is whole-sequence: when ``alloc`` cannot cover a reservation the
+engine preempts a victim (youngest first), frees all its blocks here, and
+requeues the request for recompute-style resumption (its prompt + tokens
+generated so far become the new teacher-forced prefix). At temperature 0
+recomputation is deterministic, so preemption never changes token streams.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def blocks_for(n_tokens: int, page_size: int) -> int:
+    """Blocks needed to hold ``n_tokens`` logical tokens."""
+    return -(-int(n_tokens) // page_size)
+
+
+@dataclasses.dataclass
+class PoolStats:
+    """Cumulative allocator statistics (exported into BENCH_serve.json)."""
+    allocs: int = 0            # physical blocks handed out
+    frees: int = 0             # physical blocks returned
+    evictions: int = 0         # slots whose blocks were freed by preemption
+    alloc_failures: int = 0    # reservations that did not fit
+    peak_used_blocks: int = 0  # high-water mark of live blocks
+
+
+class BlockPool:
+    """Fixed pool of KV-cache blocks with per-slot block tables.
+
+    ``sentinel`` (== pool_blocks) marks unallocated table entries. All
+    methods are O(blocks touched); nothing here is jit-traced — the tables
+    are shipped to the device once per engine step as a plain int32 array.
+    """
+
+    def __init__(self, pool_blocks: int, page_size: int, slots: int,
+                 max_blocks_per_seq: int):
+        assert pool_blocks > 0 and page_size > 0
+        self.pool_blocks = pool_blocks
+        self.page_size = page_size
+        self.slots = slots
+        self.max_blocks_per_seq = max_blocks_per_seq
+        self.sentinel = pool_blocks
+        # LIFO free list: lowest ids at the end so fresh allocations are
+        # deterministic (block 0 first) — handy for tests and reproducibility
+        self.free_blocks = list(range(pool_blocks - 1, -1, -1))
+        self.tables = np.full((slots, max_blocks_per_seq), self.sentinel,
+                              np.int32)
+        self.n_blocks = np.zeros((slots,), np.int32)  # allocated per slot
+        self.stats = PoolStats()
+
+    # -- capacity queries ---------------------------------------------------
+    @property
+    def used_blocks(self) -> int:
+        return self.pool_blocks - len(self.free_blocks)
+
+    @property
+    def free_block_count(self) -> int:
+        return len(self.free_blocks)
+
+    def utilization(self) -> float:
+        return self.used_blocks / self.pool_blocks
+
+    def can_fit(self, slot: int, n_tokens: int) -> bool:
+        need = blocks_for(n_tokens, self.page_size) - int(self.n_blocks[slot])
+        return need <= len(self.free_blocks)
+
+    # -- alloc / free -------------------------------------------------------
+    def alloc(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s table to cover ``n_tokens`` logical tokens.
+
+        All-or-nothing: returns False (allocating nothing) when the free
+        list cannot cover the growth, so a failed reservation leaves the
+        pool untouched and the engine can pick a victim to evict.
+        """
+        want = blocks_for(n_tokens, self.page_size)
+        assert want <= self.max_blocks_per_seq, (n_tokens, want)
+        have = int(self.n_blocks[slot])
+        need = want - have
+        if need <= 0:
+            return True
+        if need > len(self.free_blocks):
+            self.stats.alloc_failures += 1
+            return False
+        for i in range(have, want):
+            self.tables[slot, i] = self.free_blocks.pop()
+        self.n_blocks[slot] = want
+        self.stats.allocs += need
+        self.stats.peak_used_blocks = max(self.stats.peak_used_blocks,
+                                          self.used_blocks)
+        return True
+
+    def free_slot(self, slot: int) -> int:
+        """Return every block of ``slot`` to the free list; reset its table
+        to sentinels. Returns the number of blocks freed."""
+        n = int(self.n_blocks[slot])
+        for i in range(n):
+            self.free_blocks.append(int(self.tables[slot, i]))
+        self.tables[slot, :n] = self.sentinel
+        self.n_blocks[slot] = 0
+        self.stats.frees += n
+        return n
+
+    def evict_slot(self, slot: int) -> int:
+        """free_slot + eviction accounting (the preemption path)."""
+        n = self.free_slot(slot)
+        self.stats.evictions += 1
+        return n

@@ -1,0 +1,300 @@
+"""Paged KV cache (DESIGN.md §7): block pool, block-table attention paths,
+and the preempting engine.
+
+Exactness contract: the paged paths must reproduce the contiguous paths'
+token streams across every cache family the registry serves — GQA (+ the
+paper's ExpMul variant), MLA latent caches, and the windowed hybrid (whose
+recurrent blocks bypass paging). Block tables in the API-level tests are
+deliberately shuffled so identity layouts can't mask gather/scatter bugs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.api import (
+    decode_step_paged,
+    forward,
+    init_model,
+    init_paged_state,
+    prefill_paged,
+)
+from repro.serve.engine import ServeEngine
+from repro.serve.paged import BlockPool, blocks_for
+
+FAMILIES = [
+    ("qwen2-0.5b", "exact", 12, 5),        # GQA + qkv bias
+    ("qwen2-0.5b", "expmul", 12, 5),       # the paper's variant
+    ("minicpm3-4b", "exact", 12, 4),       # MLA latent pool, Dq != Dv
+    ("recurrentgemma-2b", "exact", 48, 16),  # window=32 < prompt; rglru
+]
+
+
+def _setup(arch, variant="exact"):
+    cfg = get_config(arch, smoke=True, dtype="float32", param_dtype="float32",
+                     attention_variant=variant)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+# ---------------------------------------------------------------------------
+# host-side block pool
+# ---------------------------------------------------------------------------
+def test_block_pool_alloc_free():
+    pool = BlockPool(pool_blocks=8, page_size=4, slots=2, max_blocks_per_seq=4)
+    assert pool.free_block_count == 8 and pool.used_blocks == 0
+    assert pool.alloc(0, 5)                  # 5 tokens -> 2 blocks
+    assert pool.n_blocks[0] == 2 and pool.used_blocks == 2
+    assert pool.alloc(0, 7)                  # still 2 blocks: no growth
+    assert pool.used_blocks == 2 and pool.stats.allocs == 2
+    assert pool.alloc(0, 9)                  # 3 blocks
+    assert pool.used_blocks == 3
+    # tables hold real ids in logical order, sentinel elsewhere
+    assert all(b < 8 for b in pool.tables[0, :3])
+    assert pool.tables[0, 3] == pool.sentinel
+    assert pool.tables[1, 0] == pool.sentinel
+    last_owned = int(pool.tables[0, 2])
+    freed = pool.free_slot(0)
+    assert freed == 3 and pool.used_blocks == 0
+    assert (pool.tables[0] == pool.sentinel).all()
+    # LIFO: the most recently freed block is reused first
+    assert pool.alloc(1, 4)
+    assert int(pool.tables[1, 0]) == last_owned
+
+
+def test_block_pool_exhaustion_is_all_or_nothing():
+    pool = BlockPool(pool_blocks=4, page_size=4, slots=2, max_blocks_per_seq=4)
+    assert pool.alloc(0, 12)                 # 3 of 4 blocks
+    used_before = pool.used_blocks
+    assert not pool.alloc(1, 8)              # needs 2, only 1 free
+    assert pool.used_blocks == used_before   # failure allocated nothing
+    assert pool.stats.alloc_failures == 1
+    assert pool.alloc(1, 4)                  # 1 block still fits
+    assert not pool.can_fit(1, 8)
+    pool.evict_slot(0)
+    assert pool.stats.evictions == 1
+    assert pool.can_fit(1, 8)
+
+
+def test_blocks_for():
+    assert blocks_for(0, 4) == 0
+    assert blocks_for(1, 4) == 1
+    assert blocks_for(4, 4) == 1
+    assert blocks_for(5, 4) == 2
+
+
+# ---------------------------------------------------------------------------
+# API level: paged prefill + paged decode vs forward, shuffled block tables
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch,variant,S,C", FAMILIES)
+def test_paged_prefill_plus_decode_matches_forward(arch, variant, S, C):
+    params, cfg = _setup(arch, variant)
+    B, ps = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 1, cfg.vocab_size)
+    ref = forward(params, {"tokens": toks}, cfg)          # (B, S, V)
+
+    max_blocks = blocks_for(64, ps)
+    pool_blocks = 2 * max_blocks + 3
+    state = init_paged_state(cfg, B, pool_blocks, ps)
+    # shuffled non-identity block tables: physical layout must not matter
+    perm = np.random.default_rng(0).permutation(pool_blocks)
+    bt = jnp.asarray(np.stack([perm[:max_blocks],
+                               perm[max_blocks:2 * max_blocks]]).astype(np.int32))
+    lengths = jnp.zeros((B,), jnp.int32)
+    npre = S - 2  # prefill most of the prompt (partial last chunk), decode rest
+    for start in range(0, npre, C):
+        take = min(C, npre - start)
+        chunk = jnp.zeros((B, C), jnp.int32)
+        chunk = chunk.at[:, :take].set(toks[:, start:start + take])
+        logits, state = prefill_paged(params, state, chunk, lengths,
+                                      jnp.full((B,), take, jnp.int32), bt,
+                                      cfg, page_size=ps)
+        lengths = lengths + take
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref[:, npre - 1]),
+                               atol=1e-4, rtol=1e-4)
+    for i in range(npre, S):
+        logits, state = decode_step_paged(params, state, toks[:, i],
+                                          jnp.full((B,), i, jnp.int32), bt,
+                                          cfg, page_size=ps)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(ref[:, i]),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_paged_idle_slot_is_noop():
+    """Sentinel block tables: an idle row must neither write the pool nor
+    corrupt the active row."""
+    params, cfg = _setup("qwen2-0.5b")
+    B, S, C, ps = 2, 8, 4, 4
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 1, cfg.vocab_size)
+    ref = forward(params, {"tokens": toks}, cfg)
+
+    pool_blocks = 4
+    state = init_paged_state(cfg, B, pool_blocks, ps)
+    # row 0 owns real blocks; row 1 holds only sentinels (never admitted)
+    bt = jnp.asarray(np.array([[2, 0], [pool_blocks, pool_blocks]], np.int32))
+    lengths = jnp.zeros((B,), jnp.int32)
+    for start in range(0, S, C):
+        chunk = jnp.zeros((B, C), jnp.int32)
+        chunk = chunk.at[0, :].set(toks[0, start:start + C])
+        nv = jnp.array([C, 0], jnp.int32)
+        logits, state = prefill_paged(params, state, chunk, lengths, nv, bt,
+                                      cfg, page_size=ps)
+        lengths = lengths + nv
+    np.testing.assert_allclose(np.asarray(logits[0]), np.asarray(ref[0, S - 1]),
+                               atol=1e-4, rtol=1e-4)
+    # the pool block never handed out (id 1 or 3) must still be all-zero
+    for c in jax.tree.leaves(state["caches"]):
+        unused = c[:, 1 * ps:2 * ps]
+        assert float(jnp.max(jnp.abs(unused))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# engine level: paged vs contiguous token streams
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "recurrentgemma-2b"])
+def test_engine_paged_matches_contiguous(arch):
+    params, cfg = _setup(arch)
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(1, 200, size=n)) for n in (5, 19, 3, 14)]
+
+    cont = ServeEngine(params, cfg, slots=2, max_len=64, chunk_size=8)
+    cr = [cont.submit(p, 6, rid=i) for i, p in enumerate(prompts)]
+    cont.run()
+    paged = ServeEngine(params, cfg, slots=2, max_len=64, chunk_size=8,
+                        kv_layout="paged", page_size=8)
+    pr = [paged.submit(p, 6, rid=i) for i, p in enumerate(prompts)]
+    paged.run()
+
+    assert [r.out for r in cr] == [r.out for r in pr]
+    assert paged.preemptions == 0  # fully provisioned pool never preempts
+    st = paged.memory_stats()
+    # on-demand blocks: the pool never holds more than it reserved, and the
+    # peak resident KV stays well under the contiguous slots*max_len
+    assert st["kv_peak_used_tokens"] <= st["kv_reserved_tokens"]
+    assert st["kv_peak_used_tokens"] < cont.memory_stats()["kv_peak_used_tokens"]
+
+
+def test_engine_paged_expmul_variant():
+    params, cfg = _setup("qwen2-0.5b", "expmul")
+    cont = ServeEngine(params, cfg, slots=2, max_len=32, chunk_size=4)
+    cr = [cont.submit([1, 2, 3, 4, 5], 5, rid=i) for i in range(3)]
+    cont.run()
+    paged = ServeEngine(params, cfg, slots=2, max_len=32, chunk_size=4,
+                        kv_layout="paged", page_size=4)
+    pr = [paged.submit([1, 2, 3, 4, 5], 5, rid=i) for i in range(3)]
+    paged.run()
+    assert [r.out for r in cr] == [r.out for r in pr]
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "recurrentgemma-2b"])
+def test_engine_preemption_requeue_preserves_streams(arch):
+    """A pool too small for all slots must preempt-and-requeue (recompute
+    resumption) without changing any request's token stream."""
+    params, cfg = _setup(arch)
+    rng = np.random.default_rng(1)
+    prompts = [list(rng.integers(1, 200, size=n)) for n in (9, 21, 6, 13, 17)]
+
+    ref = ServeEngine(params, cfg, slots=3, max_len=64, chunk_size=8)
+    rr = [ref.submit(p, 6, rid=i) for i, p in enumerate(prompts)]
+    ref.run()
+
+    tight = ServeEngine(params, cfg, slots=3, max_len=64, chunk_size=8,
+                        kv_layout="paged", page_size=4, pool_blocks=12)
+    tr = [tight.submit(p, 6, rid=i) for i, p in enumerate(prompts)]
+    tight.run()
+
+    assert all(r.done for r in tr)
+    assert tight.preemptions > 0          # the point of the tight pool
+    assert tight.pool.stats.evictions == tight.preemptions
+    assert tight.pool.used_blocks == 0    # everything returned at the end
+    assert [r.out for r in rr] == [r.out for r in tr]
+
+
+def test_engine_paged_slot_reuse_is_clean():
+    """A request admitted into a reused slot (freed blocks recycled) must
+    match the same request in a fresh paged engine."""
+    params, cfg = _setup("qwen2-0.5b")
+    rng = np.random.default_rng(4)
+    long_first = list(rng.integers(1, 200, size=30))
+    short_second = list(rng.integers(1, 200, size=6))
+
+    eng = ServeEngine(params, cfg, slots=1, max_len=64, chunk_size=8,
+                      kv_layout="paged", page_size=4)
+    eng.submit(long_first, 5)
+    second = eng.submit(short_second, 5)
+    eng.run()
+
+    fresh = ServeEngine(params, cfg, slots=1, max_len=64, chunk_size=8,
+                        kv_layout="paged", page_size=4)
+    ref = fresh.submit(short_second, 5)
+    fresh.run()
+    assert second.done and second.out == ref.out
+
+
+def test_paged_decode_gather_pallas_matches_gather_xla():
+    """The Pallas-kernel paged decode must agree with the XLA gather path
+    (CPU runs the kernel in interpret mode)."""
+    import repro.core.attention  # noqa: F401 — registers built-ins
+    from repro.kernels.registry import AttentionSpec, dispatch_paged_decode
+
+    rng = np.random.default_rng(0)
+    B, H, Hkv, D, ps, n_blocks = 2, 4, 2, 16, 8, 6
+    pool_tokens = n_blocks * ps
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    k_pool = jnp.asarray(rng.standard_normal((pool_tokens, Hkv, D)), jnp.float32)
+    v_pool = jnp.asarray(rng.standard_normal((pool_tokens, Hkv, D)), jnp.float32)
+    perm = rng.permutation(n_blocks)
+    bt = jnp.asarray(np.stack([perm[:3], perm[3:]]).astype(np.int32))
+    from repro.kernels.paged import slot_rows
+    rows = slot_rows(bt, ps)
+    lengths = jnp.asarray([13, 7], jnp.int32)
+    for variant in ("exact", "expmul"):
+        ref = dispatch_paged_decode(
+            AttentionSpec(variant=variant, paged_impl="gather_xla"),
+            q, k_pool, v_pool, rows, lengths)
+        out = dispatch_paged_decode(
+            AttentionSpec(variant=variant, paged_impl="gather_pallas"),
+            q, k_pool, v_pool, rows, lengths)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_engine_pool_too_small_for_one_request_raises():
+    params, cfg = _setup("qwen2-0.5b")
+    eng = ServeEngine(params, cfg, slots=1, max_len=64, chunk_size=8,
+                      kv_layout="paged", page_size=4, pool_blocks=2)
+    eng.submit(list(range(1, 30)), 4)
+    with pytest.raises(RuntimeError, match="KV pool exhausted"):
+        eng.run()
+
+
+def test_engine_pool_too_small_for_first_chunk_raises():
+    """An empty pool that can't even hold the first prefill chunk must fail
+    loudly instead of busy-spinning in run() forever."""
+    params, cfg = _setup("qwen2-0.5b")
+    eng = ServeEngine(params, cfg, slots=2, max_len=64, chunk_size=16,
+                      kv_layout="paged", page_size=8, pool_blocks=1)
+    eng.submit(list(range(1, 30)), 4)
+    with pytest.raises(RuntimeError, match="KV pool too small"):
+        eng.run()
+
+
+def test_engine_mutual_eviction_terminates():
+    """Two requests that each fit the pool alone but not together must not
+    evict each other forever: preemption preserves seniority (admit_order),
+    so the older request always wins reservations and finishes first."""
+    params, cfg = _setup("qwen2-0.5b")
+    rng = np.random.default_rng(7)
+    prompts = [list(rng.integers(1, 200, size=30)) for _ in range(2)]
+
+    eng = ServeEngine(params, cfg, slots=2, max_len=64, chunk_size=8,
+                      kv_layout="paged", page_size=8, pool_blocks=5)
+    reqs = [eng.submit(p, 4, rid=i) for i, p in enumerate(prompts)]
+    eng.run()  # livelocked before the seniority fix
+    assert all(r.done for r in reqs)
+
+    ref = ServeEngine(params, cfg, slots=2, max_len=64, chunk_size=8)
+    rr = [ref.submit(p, 4, rid=i) for i, p in enumerate(prompts)]
+    ref.run()
+    assert [r.out for r in reqs] == [r.out for r in rr]
