@@ -1,5 +1,5 @@
 """Serving-path throughput: chunked prefill vs decode, exact vs ExpMul,
-contiguous vs paged KV cache.
+contiguous vs paged KV cache, fp32 vs quantized (int8/fp8) KV storage.
 
 Drives real requests through ``ServeEngine`` (CPU software proxy — the TPU
 target's win is VPU op count) at *mixed prompt lengths* and measures:
@@ -9,18 +9,28 @@ target's win is VPU op count) at *mixed prompt lengths* and measures:
   * first-token engine steps vs the legacy teacher-forced path
   * KV memory utilization — reserved vs peak-resident vs peak-active tokens
     (the paged pool allocates blocks on demand, so its resident KV tracks
-    actual lengths instead of slots x max_len; DESIGN.md §7)
+    actual lengths instead of slots x max_len; DESIGN.md §7) and the same
+    in real bytes (codes + scale pools) per ``kv_dtype`` — the
+    ``kv_bytes_per_active_token`` column is the cross-dtype headline
   * preemptions / evictions / recompute tokens when the pool is tight
+  * temp-0 stream fidelity of quantized KV: ``exact_match_vs_fp32`` is the
+    token-level exact-match rate against the fp32 run of the same
+    variant/layout, asserted against per-(variant, dtype) floors
+    (``STREAM_MATCH_MIN``; exact/int8 carries the >= 0.99 acceptance bar,
+    the fp8/expmul floors only catch codec breakage — DESIGN.md §8)
 
 Token streams are asserted identical between the contiguous and paged runs
-of each variant (temperature 0), so the numbers always describe equivalent
-output.
+of each (variant, kv_dtype), so the numbers always describe equivalent
+output; a paged run with an explicit pool budget reserves ~3-4x the tokens
+at int8/fp8 for the same unquantized-cache bytes (``pool_blocks`` sizing;
+the engines here serve float32, so the multiplier is ~3.2x).
 
 Emits ``BENCH_serve.json`` next to the repo root so the perf trajectory of
 the serving path is tracked across PRs (schema: benchmarks/README.md).
 
   PYTHONPATH=src python benchmarks/serve_throughput.py [--arch qwen2-0.5b]
   PYTHONPATH=src python benchmarks/serve_throughput.py --smoke   # CI mode
+  PYTHONPATH=src python benchmarks/serve_throughput.py --kv-dtypes fp32,int8
 """
 from __future__ import annotations
 
@@ -34,8 +44,27 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models.api import init_model
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ServeEngine, stream_match_rate
 from repro.serve.paged import blocks_for
+
+
+# temp-0 stream fidelity floors vs the fp32 cache, per (variant, dtype).
+# exact/int8 is the acceptance bar: amax/254 max error stays below the
+# proxy model's argmax margins, so streams must match essentially always.
+# fp8's 3-bit mantissa (rel err <= 2^-4, numerics/quant.py) flips
+# near-tied argmaxes of the *random-init* proxy, and one flip cascades
+# through the rest of an open-loop greedy stream. Under the ExpMul variant
+# softmax weights are themselves powers of two, so a KV perturbation that
+# crosses an L_hat rounding threshold jumps a weight by a factor of 2 —
+# ties flip by construction and only the exact variant carries the 99%
+# bar. The lower floors catch codec breakage (a broken codec scores ~0),
+# not near-tie flips.
+STREAM_MATCH_MIN = {
+    ("exact", "int8"): 0.99,
+    ("exact", "fp8"): 0.20,
+    ("expmul", "int8"): 0.50,
+    ("expmul", "fp8"): 0.20,
+}
 
 
 def mixed_prompts(rng, vocab, slots, prompt_len):
@@ -45,14 +74,14 @@ def mixed_prompts(rng, vocab, slots, prompt_len):
     return [list(rng.integers(1, vocab, size=n)) for n in lens]
 
 
-def bench_run(params, cfg0, variant, kv_layout, *, slots, prompt_len,
-              max_new, chunk, max_len, page_size, pool_frac):
+def bench_run(params, cfg0, variant, kv_layout, kv_dtype, *, slots,
+              prompt_len, max_new, chunk, max_len, page_size, pool_frac):
     cfg = cfg0.replace(attention_variant=variant)
     rng = np.random.default_rng(0)
     prompts = mixed_prompts(rng, cfg.vocab_size, slots, prompt_len)
 
     kw = {"slots": slots, "max_len": max_len, "chunk_size": chunk,
-          "kv_layout": kv_layout}
+          "kv_layout": kv_layout, "kv_dtype": kv_dtype}
     if kv_layout == "paged":
         full = slots * blocks_for(max_len, page_size)
         kw.update(page_size=page_size,
@@ -103,9 +132,12 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=384)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--pool-frac", type=float, default=0.5,
-                    help="paged pool size as a fraction of the fully "
-                         "provisioned slots*max_len (small enough to show "
-                         "the memory win, large enough to avoid thrashing)")
+                    help="paged pool budget as a fraction of the fully "
+                         "provisioned slots*max_len unquantized bytes "
+                         "(small enough to show the memory win, large "
+                         "enough to avoid thrashing at fp32)")
+    ap.add_argument("--kv-dtypes", default="fp32,int8,fp8",
+                    help="comma list of KV storage dtypes to sweep")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fast configuration for CI")
     ap.add_argument("--out", default=str(
@@ -114,6 +146,10 @@ def main(argv=None):
     if args.smoke:
         args.slots, args.prompt_len, args.max_new = 2, 32, 8
         args.chunk, args.max_len, args.page_size = 16, 64, 8
+
+    kv_dtypes = [d.strip() for d in args.kv_dtypes.split(",") if d.strip()]
+    assert kv_dtypes and kv_dtypes[0] == "fp32", \
+        "the sweep needs fp32 first (quantized runs compare against it)"
 
     cfg = get_config(args.arch, smoke=True, dtype="float32",
                      param_dtype="float32")
@@ -129,42 +165,74 @@ def main(argv=None):
         "chunk": args.chunk,
         "page_size": args.page_size,
         "pool_frac": args.pool_frac,
+        "kv_dtypes": kv_dtypes,
         "runs": [],
     }
     print(f"# serve_throughput {args.arch} slots={args.slots} "
           f"prompt<={args.prompt_len} chunk={args.chunk} "
-          f"page={args.page_size}")
+          f"page={args.page_size} kv_dtypes={','.join(kv_dtypes)}")
     for variant in ("exact", "expmul"):
-        streams = {}
-        for kv_layout in ("contiguous", "paged"):
-            r, outs = bench_run(
-                params, cfg, variant, kv_layout, slots=args.slots,
-                prompt_len=args.prompt_len, max_new=args.max_new,
-                chunk=args.chunk, max_len=args.max_len,
-                page_size=args.page_size, pool_frac=args.pool_frac)
-            streams[kv_layout] = outs
-            results["runs"].append(r)
-            print(f"  {variant:7s}/{kv_layout:10s}: prefill "
-                  f"{r['prefill_tok_per_s']:9.1f} tok/s "
-                  f"({r['prefill_steps']} steps), decode "
-                  f"{r['decode_tok_per_s']:7.1f} tok/s, first tok step "
-                  f"{r['first_token_steps']} (legacy "
-                  f"{r['legacy_first_token_steps']}), KV "
-                  f"{r['kv_peak_used_tokens']}/{r['kv_reserved_tokens']} tok "
-                  f"({r['kv_tokens_per_active_token']:.2f}x active), "
-                  f"preempt {r['preemptions']}")
-        assert streams["contiguous"] == streams["paged"], \
-            f"paged token streams diverged from contiguous ({variant})"
+        fp32_streams = {}
+        for kv_dtype in kv_dtypes:
+            streams = {}
+            for kv_layout in ("contiguous", "paged"):
+                r, outs = bench_run(
+                    params, cfg, variant, kv_layout, kv_dtype,
+                    slots=args.slots, prompt_len=args.prompt_len,
+                    max_new=args.max_new, chunk=args.chunk,
+                    max_len=args.max_len, page_size=args.page_size,
+                    pool_frac=args.pool_frac)
+                streams[kv_layout] = outs
+                if kv_dtype == "fp32":
+                    fp32_streams[kv_layout] = outs
+                    r["exact_match_vs_fp32"] = 1.0
+                else:
+                    rate = stream_match_rate(fp32_streams[kv_layout], outs)
+                    r["exact_match_vs_fp32"] = rate
+                    floor = STREAM_MATCH_MIN[(variant, kv_dtype)]
+                    assert rate >= floor, (
+                        f"{variant}/{kv_dtype}/{kv_layout} temp-0 streams "
+                        f"drifted from fp32: exact-match {rate:.2%} < "
+                        f"{floor:.0%}")
+                results["runs"].append(r)
+                print(f"  {variant:7s}/{kv_dtype:5s}/{kv_layout:10s}: "
+                      f"prefill {r['prefill_tok_per_s']:9.1f} tok/s "
+                      f"({r['prefill_steps']} st), decode "
+                      f"{r['decode_tok_per_s']:7.1f} tok/s, first tok "
+                      f"{r['first_token_steps']} (legacy "
+                      f"{r['legacy_first_token_steps']}), KV "
+                      f"{r['kv_peak_used_tokens']}/{r['kv_reserved_tokens']} "
+                      f"tok @ {r['kv_token_bytes']} B/tok "
+                      f"({r['kv_bytes_per_active_token']:.0f} B/active), "
+                      f"match {r['exact_match_vs_fp32']:.2%}, "
+                      f"preempt {r['preemptions']}")
+            assert streams["contiguous"] == streams["paged"], \
+                f"paged streams diverged from contiguous ({variant}/{kv_dtype})"
 
-    # headline: paged resident KV per active token vs contiguous reservation
-    cont = next(r for r in results["runs"] if r["kv_layout"] == "contiguous")
-    paged = next(r for r in results["runs"] if r["kv_layout"] == "paged")
+    def pick(variant, kv_dtype, kv_layout):
+        return next(r for r in results["runs"]
+                    if (r["variant"], r["kv_dtype"], r["kv_layout"])
+                    == (variant, kv_dtype, kv_layout))
+
+    # headline 1: paged resident KV per active token vs contiguous (fp32)
+    cont = pick("exact", "fp32", "contiguous")
+    paged = pick("exact", "fp32", "paged")
     results["kv_memory_reduction_vs_contiguous"] = (
         1.0 - paged["kv_tokens_per_active_token"]
         / cont["kv_tokens_per_active_token"])
     print(f"  paged KV per active token: "
           f"{results['kv_memory_reduction_vs_contiguous']:.1%} below "
           f"contiguous at mixed prompt lengths")
+    # headline 2: quantized capacity multiple at the same pool byte budget
+    for kv_dtype in kv_dtypes:
+        if kv_dtype == "fp32":
+            continue
+        q = pick("exact", kv_dtype, "paged")
+        mult = q["kv_reserved_tokens"] / paged["kv_reserved_tokens"]
+        results[f"kv_capacity_multiplier_{kv_dtype}"] = mult
+        print(f"  {kv_dtype} paged capacity: {mult:.2f}x the co-resident "
+              f"tokens of fp32 at the same pool budget "
+              f"({q['kv_token_bytes']} vs {paged['kv_token_bytes']} B/token)")
 
     pathlib.Path(args.out).write_text(json.dumps(results, indent=2) + "\n")
     print(f"wrote {args.out}")

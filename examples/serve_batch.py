@@ -1,9 +1,11 @@
 """Batched serving example: chunked prefill + continuous batching over a
 slot pool, comparing the exact and ExpMul attention variants on identical
-requests.
+requests — and, with ``--kv-dtype int8|fp8``, the quantized KV cache
+against the fp32 baseline (temp-0 exact-match rate, DESIGN.md §8).
 
-  PYTHONPATH=src python examples/serve_batch.py
+  PYTHONPATH=src python examples/serve_batch.py [--kv-dtype int8]
 """
+import argparse
 import time
 
 import jax
@@ -11,12 +13,18 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models.api import init_model
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import (
+    ServeEngine,
+    stream_match_rate,
+    validate_kv_dtype,
+)
 
 
-def run(variant: str, params, cfg0, prompts, max_new=24, chunk=16):
+def run(variant, params, cfg0, prompts, *, kv_dtype="fp32", max_new=24,
+        chunk=16):
     cfg = cfg0.replace(attention_variant=variant)
-    eng = ServeEngine(params, cfg, slots=4, max_len=128, chunk_size=chunk)
+    eng = ServeEngine(params, cfg, slots=4, max_len=128, chunk_size=chunk,
+                      kv_dtype=kv_dtype)
     reqs = [eng.submit(p, max_new, rid=i) for i, p in enumerate(prompts)]
     t0 = time.time()
     eng.run()
@@ -25,30 +33,54 @@ def run(variant: str, params, cfg0, prompts, max_new=24, chunk=16):
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kv-dtype", default="fp32",
+                    choices=["fp32", "int8", "fp8"],
+                    help="KV-cache storage dtype (int8/fp8 also print the "
+                         "exact-match rate vs the fp32 cache)")
+    args = ap.parse_args()
+
     cfg = get_config("qwen2-0.5b", smoke=True, dtype="float32",
                      param_dtype="float32")
+    try:
+        validate_kv_dtype(cfg, args.kv_dtype)
+    except ValueError as e:
+        ap.error(str(e))  # e.g. quantized + recurrent block kinds
     params = init_model(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
     prompts = [list(rng.integers(1, cfg.vocab_size, size=n))
                for n in rng.integers(24, 64, size=10)]
 
-    print("10 requests, 4 slots, chunked prefill (C=16) + continuous "
-          "batching, greedy decode")
+    print(f"10 requests, 4 slots, chunked prefill (C=16) + continuous "
+          f"batching, greedy decode, kv_dtype={args.kv_dtype}")
     for variant in ("exact", "expmul"):
-        reqs, tps, eng = run(variant, params, cfg, prompts)
-        print(f"  {variant:7s}: {eng.ticks} steps (prefill "
-              f"{eng.prefill_steps} / decode {eng.decode_steps}), "
-              f"{tps:7.1f} tok/s")
+        reqs, tps, eng = run(variant, params, cfg, prompts,
+                             kv_dtype=args.kv_dtype)
+        line = (f"  {variant:7s}: {eng.ticks} steps (prefill "
+                f"{eng.prefill_steps} / decode {eng.decode_steps}), "
+                f"{tps:7.1f} tok/s")
+        if args.kv_dtype != "fp32":
+            line += f", {eng.memory_stats()['kv_token_bytes']} KV B/token"
+            quant_bytes = eng.memory_stats()["kv_token_bytes"]
+        print(line)
         if variant == "exact":
             exact_outs = [tuple(r.out) for r in reqs]
         else:
-            agree = np.mean([
-                np.mean([a == b for a, b in zip(x, y)])
-                for x, y in zip(exact_outs, [tuple(r.out) for r in reqs])
-            ])
+            agree = stream_match_rate(exact_outs,
+                                      [tuple(r.out) for r in reqs])
             print(f"  greedy token agreement exact vs expmul: {agree:.2%}")
             print("  (quantized softmax weights occasionally flip near-ties;")
             print("   the fidelity benchmark quantifies the task-level effect)")
+    if args.kv_dtype != "fp32":
+        from repro.serve.paged import kv_token_bytes
+
+        # the loop's exact run already produced the quantized streams
+        # (exact_outs); only the fp32 reference needs a fresh engine
+        ref, _, _ = run("exact", params, cfg, prompts, kv_dtype="fp32")
+        rate = stream_match_rate([tuple(r.out) for r in ref], exact_outs)
+        print(f"  exact-match rate {args.kv_dtype} vs fp32 cache: {rate:.2%} "
+              f"at {quant_bytes} B/token "
+              f"(fp32: {kv_token_bytes(cfg, 'fp32')} B/token)")
 
 
 if __name__ == "__main__":

@@ -80,6 +80,12 @@ class ModelConfig:
     # paged KV-cache serving defaults (DESIGN §7; engine args override)
     page_size: int = 16            # tokens per KV block
     pool_blocks: int = 0           # 0: engine fully provisions slots*max_len
+    # KV-cache storage dtype (DESIGN §8): "fp32" = unquantized (cache in
+    # cfg.dtype); "int8"/"fp8" store codes + per-row f32 scales and route
+    # attention through the registry's fused-dequant ``*_q`` backends.
+    # Attention-only decoder configs only (recurrent state and encoder
+    # K/V are not KV caches — serve.engine.validate_kv_dtype rejects them).
+    kv_dtype: str = "fp32"         # fp32 | int8 | fp8
     dtype: str = "bfloat16"
     param_dtype: str = "bfloat16"
     opt_state_dtype: str = "float32"       # bf16 for the 1T-class models

@@ -47,6 +47,19 @@ def _notes(cfg) -> str:
     return ", ".join(bits) or "dense attention"
 
 
+def _kv_dtypes(cfg) -> str:
+    """Serving KV-cache dtypes this arch accepts (DESIGN.md §8).
+
+    Mirrors ``serve.engine.validate_kv_dtype``: quantized dtypes need an
+    attention-only decoder — recurrent state and encoder cross K/V are not
+    KV caches. Kept here (duplicated, not imported) so zoo_table() stays
+    importable without jax.
+    """
+    if set(cfg.block_pattern) - {"attn"} or cfg.encoder_layers:
+        return "fp32"
+    return "fp32/int8/fp8"
+
+
 def zoo_table() -> str:
     """Markdown model-zoo table — the source of README.md's table.
 
@@ -54,8 +67,9 @@ def zoo_table() -> str:
       PYTHONPATH=src python -c \
         "from repro.configs.registry import zoo_table; print(zoo_table())"
     """
-    rows = ["| arch id | family | layers | d_model | heads | params | notes |",
-            "|---|---|---|---|---|---|---|"]
+    rows = ["| arch id | family | layers | d_model | heads | params "
+            "| kv dtypes | notes |",
+            "|---|---|---|---|---|---|---|---|"]
     for arch in ARCH_IDS:
         cfg = get_config(arch)
         p = cfg.param_count()
@@ -69,5 +83,6 @@ def zoo_table() -> str:
                   if cfg.encoder_layers else str(cfg.num_layers))
         rows.append(
             f"| `{arch}` | {cfg.family} | {layers} | {cfg.d_model} "
-            f"| {cfg.num_heads} | {params} | {_notes(cfg)} |")
+            f"| {cfg.num_heads} | {params} | {_kv_dtypes(cfg)} "
+            f"| {_notes(cfg)} |")
     return "\n".join(rows)

@@ -1,0 +1,182 @@
+"""Quantized-KV attention backends: quantize-on-write, fused dequant-on-read
+(DESIGN.md §8).
+
+This module registers the ``<base>_q`` entries that ``AttentionSpec``
+resolves to when ``kv_dtype`` is "int8" or "fp8" (the registry's quantized
+axis), plus the paged-pool write/read primitives the layers use:
+
+  * cache-side K/V operands arrive as ``numerics.quant.QuantKV``
+    (codes + per-row float32 scales, quantized along the feature axis);
+  * dequant is one fused multiply feeding the score/value matmuls —
+    XLA folds it into the gather/einsum, so the full-precision K/V exists
+    only inside the attention inner loop, never in cache storage;
+  * the full-sequence ``*_q`` impls fake-quantize fresh K/V with the same
+    codec, making forward() numerics bit-identical to a prefill+decode
+    round-trip through a quantized cache (the property the kvquant tests
+    pin down).
+
+Writes are quantize-on-write: the layer encodes each token's K/V row once
+(``quantize_kv``) and scatters codes + scales; ``quant_scatter_rows`` below
+is the paged form (codes pool + parallel scale pool, DESIGN.md §7/§8).
+Recurrent block kinds have no KV cache and bypass quantization entirely,
+exactly as they bypass paging.
+
+No quantized Pallas kernels yet: the ``pallas*_q`` names fall back to the
+fused-dequant XLA paths so one config knob stays valid across backends
+(mirroring the ``gather_pallas`` prefill fallback in core.attention).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.attention import (
+    _masked_decode_xla,
+    prefill_attention,
+)
+from repro.kernels.paged import gather_rows, scatter_rows
+from repro.kernels.registry import (
+    dispatch_attention,
+    register_attention,
+    register_decode,
+    register_paged_decode,
+    register_paged_prefill,
+    register_prefill,
+)
+from repro.numerics.quant import QuantKV, dequantize_kv, fake_quant_kv, quantize_kv
+
+__all__ = [
+    "QuantKV",
+    "quantize_kv",
+    "dequantize_kv",
+    "gather_dequant_rows",
+    "quant_scatter_rows",
+]
+
+
+# ---------------------------------------------------------------------------
+# Paged-pool primitives (codes pool + parallel scale pool)
+# ---------------------------------------------------------------------------
+def gather_dequant_rows(code_pool, scale_pool, rows, kv_dtype):
+    """Gather quantized rows through a block table and dequantize fused.
+
+    code_pool: (pool_tokens, ...); scale_pool: (pool_tokens, ...) with one
+    fewer trailing dim; rows: (B, L). Returns float32 (B, L, ...). Sentinel
+    rows read code 0 / scale 0 -> exact 0.0, and are masked by validity
+    downstream exactly as in the fp32 gather path.
+    """
+    return dequantize_kv(gather_rows(code_pool, rows),
+                         gather_rows(scale_pool, rows), kv_dtype)
+
+
+def quant_scatter_rows(code_pool, scale_pool, rows, values, valid=None, *,
+                       kv_dtype):
+    """Quantize-on-write into a paged pool: encode ``values`` rows and
+    scatter codes + scales in one step (invalid rows drop exactly, leaving
+    both pools untouched — the allocator's sentinel contract).
+
+    values: (N, ..., D) full-precision rows matching code_pool's trailing
+    dims. Returns (new_code_pool, new_scale_pool).
+    """
+    q = quantize_kv(values, kv_dtype)
+    return (scatter_rows(code_pool, rows, q.codes, valid),
+            scatter_rows(scale_pool, rows, q.scale, valid))
+
+
+def _dequant(kv, spec):
+    """QuantKV -> float32 array (fused: one multiply into the consumer)."""
+    return dequantize_kv(kv.codes, kv.scale, spec.kv_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence: fake-quant wrappers (forward == cache round-trip numerics)
+# ---------------------------------------------------------------------------
+def _register_full_q(base):
+    @register_attention(base + "_q")
+    def _full_q(q, k, v, *, spec, causal, scale):
+        k = fake_quant_kv(k, spec.kv_dtype)
+        v = fake_quant_kv(v, spec.kv_dtype)
+        return dispatch_attention(spec.replace(kv_dtype="fp32"), q, k, v,
+                                  causal=causal, scale=scale)
+    return _full_q
+
+
+for _base in ("ref", "flash_jnp", "pallas"):
+    _register_full_q(_base)
+
+
+# ---------------------------------------------------------------------------
+# Contiguous prefill / decode: QuantKV caches, fused dequant
+# ---------------------------------------------------------------------------
+@register_prefill("masked_xla_q")
+def _prefill_masked_xla_q(q, k, v, *, spec, scale, q_positions, kv_positions,
+                          kv_valid):
+    """k/v: QuantKV over the concatenated [cache ++ chunk] token rows (the
+    layer concatenates codes and scales; the chunk is quantized on write,
+    so chunk queries attend to the same values decode will later read)."""
+    return prefill_attention(
+        q, _dequant(k, spec), _dequant(v, spec), q_positions=q_positions,
+        kv_positions=kv_positions, kv_valid=kv_valid, scale=scale,
+        window=spec.window, variant=spec.variant, use_ste=spec.use_ste)
+
+
+def _decode_q(q, k_cache, v_cache, lengths, *, spec, scale):
+    S = k_cache.codes.shape[2]
+    mask = jnp.arange(S)[None, :] < lengths[:, None]
+    return _masked_decode_xla(q, _dequant(k_cache, spec),
+                              _dequant(v_cache, spec), mask,
+                              variant=spec.variant, scale=scale)
+
+
+register_decode("xla_q")(_decode_q)
+# no quantized Pallas decode kernel yet: same fused-dequant XLA math
+register_decode("pallas_q")(_decode_q)
+
+
+# ---------------------------------------------------------------------------
+# Paged prefill / decode: gather codes + scales, dequant, positional masking
+# ---------------------------------------------------------------------------
+def _gather_dequant_kv(pool, rows, spec):
+    """QuantKV pool + (B, L) rows -> dequantized (B, Hkv, L, ·)."""
+    return jnp.moveaxis(
+        gather_dequant_rows(pool.codes, pool.scale, rows, spec.kv_dtype), 1, 2)
+
+
+def _paged_prefill_q(q, k_chunk, v_chunk, k_pool, v_pool, rows, *, spec,
+                     scale, q_positions, chunk_valid, lengths):
+    """Quantized twin of core.attention's ``gather_xla`` paged prefill:
+    the history is gathered+dequantized through ``rows``, the (already
+    quantized) chunk is dequantized in place, and the positional-masking
+    math is identical — so fp32 and quantized paged serving share one
+    masking proof."""
+    B, L = rows.shape
+    k_all = jnp.concatenate(
+        [_gather_dequant_kv(k_pool, rows, spec), _dequant(k_chunk, spec)],
+        axis=2)
+    v_all = jnp.concatenate(
+        [_gather_dequant_kv(v_pool, rows, spec), _dequant(v_chunk, spec)],
+        axis=2)
+    hist_pos = jnp.broadcast_to(jnp.arange(L)[None, :], (B, L))
+    kv_positions = jnp.concatenate([hist_pos, q_positions], axis=1)
+    kv_valid = jnp.concatenate(
+        [hist_pos < lengths[:, None], chunk_valid], axis=1)
+    return prefill_attention(
+        q, k_all, v_all, q_positions=q_positions, kv_positions=kv_positions,
+        kv_valid=kv_valid, scale=scale, window=spec.window,
+        variant=spec.variant, use_ste=spec.use_ste)
+
+
+def _paged_decode_q(q, k_pool, v_pool, rows, lengths, *, spec, scale):
+    L = rows.shape[1]
+    pos = jnp.arange(L)[None, :]
+    mask = pos < lengths[:, None]
+    if spec.window is not None:
+        mask &= pos >= lengths[:, None] - spec.window
+    return _masked_decode_xla(q, _gather_dequant_kv(k_pool, rows, spec),
+                              _gather_dequant_kv(v_pool, rows, spec), mask,
+                              variant=spec.variant, scale=scale)
+
+
+register_paged_prefill("gather_xla_q")(_paged_prefill_q)
+register_paged_prefill("gather_pallas_q")(_paged_prefill_q)
+register_paged_decode("gather_xla_q")(_paged_decode_q)
+register_paged_decode("gather_pallas_q")(_paged_decode_q)

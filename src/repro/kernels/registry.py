@@ -32,6 +32,13 @@ purely positional (``j < lengths[b]``, window by ``lengths - j``).
 Built-in implementations live in ``repro.core.attention`` and register
 themselves on import; new backends (e.g. a Pallas prefill kernel) register
 under a new name and become selectable purely through the model config.
+
+``AttentionSpec.kv_dtype`` adds a quantized-KV axis to every table
+(DESIGN.md §8): when it is "int8" or "fp8" the resolvers return the
+``<base>_q`` entry — registered by ``repro.kernels.kvquant`` — whose
+cache-side K/V operands are ``numerics.quant.QuantKV`` (codes + per-row
+float32 scales) and which dequantizes fused into the attention inner loop,
+so full-precision K/V never round-trips through cache storage.
 """
 from __future__ import annotations
 
@@ -54,27 +61,51 @@ class AttentionSpec:
     variant: str = "exact"           # exact | expmul
     use_ste: bool = False            # straight-through grads for expmul
     window: int | None = None        # local attention span
+    kv_dtype: str = "fp32"           # fp32 | int8 | fp8 (KV-cache storage)
     block_q: int = 128
     block_k: int = 512
     decode_block_k: int = 256
     q_chunks: int = 4                # causal block skipping (flash_jnp)
     remat: bool = True
 
+    def quantized(self) -> bool:
+        """True when KV is stored quantized (DESIGN.md §8).
+
+        Quantized specs resolve to the ``<base>_q`` entry of each table:
+        the cache-side K/V operands arrive as ``numerics.quant.QuantKV``
+        (codes + per-row scales) and the impl dequantizes fused into its
+        inner loop; the full-sequence ``_q`` impls fake-quant fresh K/V so
+        train/forward numerics match a cache round-trip exactly.
+        """
+        return self.kv_dtype != "fp32"
+
+    def _q(self, name: str) -> str:
+        return name + "_q" if self.quantized() else name
+
+    def resolved_impl(self) -> str:
+        return self._q(self.impl)
+
     def resolved_decode_impl(self) -> str:
         if self.decode_impl is not None:
-            return self.decode_impl
-        return "pallas" if self.impl == "pallas" else "xla"
+            return self._q(self.decode_impl)
+        return self._q("pallas" if self.impl == "pallas" else "xla")
 
     def resolved_prefill_impl(self) -> str:
-        return self.prefill_impl or "masked_xla"
+        return self._q(self.prefill_impl or "masked_xla")
 
     def resolved_paged_impl(self) -> str:
-        return self.paged_impl or "gather_xla"
+        return self._q(self.paged_impl or "gather_xla")
 
     @classmethod
     def from_config(cls, cfg, *, window=None, variant=None,
-                    use_ste=False) -> "AttentionSpec":
-        """Build a spec from a ModelConfig (the single cfg->kernel mapping)."""
+                    use_ste=False, kv_dtype=None) -> "AttentionSpec":
+        """Build a spec from a ModelConfig (the single cfg->kernel mapping).
+
+        ``kv_dtype`` overrides ``cfg.kv_dtype`` — layers that manage their
+        own quantization outside the dispatch (MLA quantizes *latents*
+        before expansion) pass ``kv_dtype="fp32"`` so the core never
+        double-quantizes the expanded K/V.
+        """
         return cls(
             impl=cfg.attention_impl,
             decode_impl=cfg.attention_decode_impl,
@@ -83,6 +114,7 @@ class AttentionSpec:
             variant=variant if variant is not None else cfg.attention_variant,
             use_ste=use_ste,
             window=window,
+            kv_dtype=kv_dtype if kv_dtype is not None else cfg.kv_dtype,
             block_q=cfg.attention_block_q,
             block_k=cfg.attention_block_k,
             q_chunks=cfg.attention_q_chunks,
@@ -137,9 +169,11 @@ def register_paged_decode(name: str):
 
 def _lookup(table, name, kind):
     if name not in table:
-        # built-ins register on import of the core module; importing lazily
-        # here breaks the registry <-> core circular dependency
+        # built-ins register on import of the core module (and the ``_q``
+        # quantized variants on import of kernels.kvquant); importing
+        # lazily here breaks the registry <-> core circular dependency
         import repro.core.attention  # noqa: F401
+        import repro.kernels.kvquant  # noqa: F401
     try:
         return table[name]
     except KeyError:
@@ -157,7 +191,7 @@ def attention_impls() -> tuple[str, ...]:
 def dispatch_attention(spec: AttentionSpec, q, k, v, *, causal=True,
                        scale=None):
     """Full-sequence attention. q: (B,H,Sq,D); k/v: (B,Hkv,Sk,·)."""
-    fn = _lookup(_ATTENTION_IMPLS, spec.impl, "full-sequence")
+    fn = _lookup(_ATTENTION_IMPLS, spec.resolved_impl(), "full-sequence")
     return fn(q, k, v, spec=spec, causal=causal, scale=scale)
 
 

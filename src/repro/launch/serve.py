@@ -2,7 +2,7 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
       --requests 8 --max-new 32 --chunk 32 [--variant expmul] \
-      [--kv-layout paged --page-size 16 --pool-blocks 0]
+      [--kv-layout paged --page-size 16 --pool-blocks 0] [--kv-dtype int8]
 """
 from __future__ import annotations
 
@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models.api import init_model
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ServeEngine, validate_kv_dtype
 
 
 def main(argv=None):
@@ -36,17 +36,29 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=0,
                     help="tokens per KV block (0 = cfg.page_size)")
     ap.add_argument("--pool-blocks", type=int, default=0,
-                    help="paged pool size (0 = fully provisioned)")
+                    help="paged pool size as an unquantized-equivalent "
+                         "byte budget (0 = fully provisioned; quantized "
+                         "dtypes fit proportionally more blocks)")
+    ap.add_argument("--kv-dtype", default="fp32",
+                    choices=["fp32", "int8", "fp8"],
+                    help="KV-cache storage dtype (int8/fp8: quantize-on-"
+                         "write + fused dequant; attention-only decoder "
+                         "archs)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke, dtype="float32",
                      param_dtype="float32", attention_variant=args.variant)
+    try:
+        validate_kv_dtype(cfg, args.kv_dtype)
+    except ValueError as e:
+        ap.error(str(e))  # clear rejection (e.g. quantized + recurrent kinds)
     params = init_model(jax.random.PRNGKey(0), cfg)
     eng = ServeEngine(params, cfg, slots=args.slots, max_len=args.max_len,
                       chunk_size=args.chunk, temperature=args.temperature,
                       kv_layout=args.kv_layout,
                       page_size=args.page_size or None,
-                      pool_blocks=args.pool_blocks or None)
+                      pool_blocks=args.pool_blocks or None,
+                      kv_dtype=args.kv_dtype)
     rng = np.random.default_rng(0)
     reqs = [
         eng.submit(
@@ -59,15 +71,21 @@ def main(argv=None):
     t0 = time.time()
     eng.run()
     dt = time.time() - t0
-    print(f"variant={args.variant} kv={args.kv_layout} "
+    print(f"variant={args.variant} kv={args.kv_layout}/{args.kv_dtype} "
           f"requests={len(reqs)} chunk={args.chunk} "
           f"steps={eng.ticks} (prefill {eng.prefill_steps} / decode "
           f"{eng.decode_steps}) generated={eng.tokens_generated} tokens "
           f"({eng.tokens_generated / dt:.1f} tok/s)")
+    st = eng.memory_stats()
     if args.kv_layout == "paged":
-        st = eng.memory_stats()
         print(f"  KV: {st['kv_peak_used_tokens']}/{st['kv_reserved_tokens']} "
-              f"peak/reserved tokens, {st['preemptions']} preemptions")
+              f"peak/reserved tokens "
+              f"({st['kv_peak_used_bytes']}/{st['kv_reserved_bytes']} bytes "
+              f"at {st['kv_token_bytes']} B/token), "
+              f"{st['preemptions']} preemptions")
+    elif args.kv_dtype != "fp32":
+        print(f"  KV: {st['kv_token_bytes']} B/token "
+              f"({st['kv_reserved_bytes']} bytes reserved)")
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt[:4]={r.prompt[:4]} -> out[:8]={r.out[:8]}")
     return reqs

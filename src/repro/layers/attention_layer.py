@@ -2,13 +2,20 @@
 local windows. Full-sequence (train), chunked-prefill, and single-token
 decode (KV cache) paths all route through the attention backend registry
 (``repro.kernels.registry``) — i.e. through the paper's exact/ExpMul kernel
-selection, driven entirely by the model config."""
+selection, driven entirely by the model config.
+
+``cfg.kv_dtype`` in {"int8", "fp8"} stores every KV cache quantized
+(DESIGN.md §8): caches carry code buffers plus parallel per-(token, head)
+float32 scale buffers (``k_scale``/``v_scale``), tokens are quantized once
+on write, and the registry's ``*_q`` backends dequantize fused on read —
+the same codec on the contiguous, rolling-window, and paged paths."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 import repro.core.attention  # noqa: F401 — registers the built-in backends
+import repro.kernels.kvquant  # noqa: F401 — registers the quantized (_q) backends
 from repro.kernels.paged import scatter_rows
 from repro.kernels.registry import (
     AttentionSpec,
@@ -20,6 +27,16 @@ from repro.kernels.registry import (
 )
 from repro.layers.common import dense_init
 from repro.layers.rotary import apply_rope
+from repro.numerics.quant import (
+    QUANT_KV_DTYPES,
+    QuantKV,
+    kv_code_dtype,
+    quantize_kv,
+)
+
+
+def kv_quantized(cfg) -> bool:
+    return cfg.kv_dtype in QUANT_KV_DTYPES
 
 
 def attn_init(key, cfg, dtype):
@@ -86,8 +103,10 @@ def cross_attn_kv(params, enc_out):
 def cross_attn_apply(params, x, enc_out, cfg, *, kv=None):
     q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
     k, v = cross_attn_kv(params, enc_out) if kv is None else kv
+    # encoder K/V are recomputed activations, not a resident cache: the
+    # kv_dtype axis does not apply (quantized + enc-dec is rejected anyway)
     o = dispatch_attention(
-        AttentionSpec.from_config(cfg), q, k, v, causal=False,
+        AttentionSpec.from_config(cfg, kv_dtype="fp32"), q, k, v, causal=False,
     )
     return jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
 
@@ -97,13 +116,22 @@ def cross_attn_decode(params, x1, kv, enc_len, cfg):
     q = jnp.einsum("bd,dhk->bhk", x1, params["wq"])
     k, v = kv
     # cross K/V are not a padded ring-buffer cache: force the xla decode path
-    spec = AttentionSpec.from_config(cfg).replace(decode_impl="xla")
+    spec = AttentionSpec.from_config(cfg, kv_dtype="fp32").replace(
+        decode_impl="xla")
     o = dispatch_decode(spec, q, k, v, enc_len)
     return jnp.einsum("bhk,hkd->bd", o, params["wo"])
 
 
 def attn_init_cache(cfg, batch, max_len, dtype):
     hd = cfg.resolved_head_dim()
+    if kv_quantized(cfg):
+        cd = kv_code_dtype(cfg.kv_dtype)
+        return {
+            "k": jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), cd),
+            "v": jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), cd),
+            "k_scale": jnp.zeros((batch, cfg.num_kv_heads, max_len), jnp.float32),
+            "v_scale": jnp.zeros((batch, cfg.num_kv_heads, max_len), jnp.float32),
+        }
     return {
         "k": jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), dtype),
         "v": jnp.zeros((batch, cfg.num_kv_heads, max_len, hd), dtype),
@@ -137,13 +165,34 @@ def attn_decode_step(params, cache, x1, cfg, lengths, *, write_pos=None,
             lambda b, n, p: jax.lax.dynamic_update_slice(b, n[:, None, :], (0, p, 0))
         )(buf, new, pos)
 
-    k_cache = upd(cache["k"], k, write_pos)
-    v_cache = upd(cache["v"], v, write_pos)
-    o = dispatch_decode(
-        AttentionSpec.from_config(cfg), q, k_cache, v_cache, attn_len,
-    )
+    def upd_scale(buf, new, pos):  # (B, Hkv, S) scale buffer, (B, Hkv) row
+        return jax.vmap(
+            lambda b, n, p: jax.lax.dynamic_update_slice(b, n[:, None], (0, p))
+        )(buf, new, pos)
+
+    spec = AttentionSpec.from_config(cfg)
+    if kv_quantized(cfg):
+        # quantize-on-write: the new token's K/V rows are encoded once and
+        # only codes + scales land in the cache; decode reads them through
+        # the fused-dequant ``xla_q`` backend (DESIGN.md §8)
+        kq = quantize_kv(k, cfg.kv_dtype)
+        vq = quantize_kv(v, cfg.kv_dtype)
+        new_cache = {
+            "k": upd(cache["k"], kq.codes, write_pos),
+            "v": upd(cache["v"], vq.codes, write_pos),
+            "k_scale": upd_scale(cache["k_scale"], kq.scale, write_pos),
+            "v_scale": upd_scale(cache["v_scale"], vq.scale, write_pos),
+        }
+        o = dispatch_decode(
+            spec, q, QuantKV(new_cache["k"], new_cache["k_scale"]),
+            QuantKV(new_cache["v"], new_cache["v_scale"]), attn_len,
+        )
+    else:
+        new_cache = {"k": upd(cache["k"], k, write_pos),
+                     "v": upd(cache["v"], v, write_pos)}
+        o = dispatch_decode(spec, q, new_cache["k"], new_cache["v"], attn_len)
     out = jnp.einsum("bhk,hkd->bd", o, params["wo"])
-    return {"k": k_cache, "v": v_cache}, out
+    return new_cache, out
 
 
 def attn_init_paged_cache(cfg, pool_tokens, dtype):
@@ -152,9 +201,20 @@ def attn_init_paged_cache(cfg, pool_tokens, dtype):
     Unlike the contiguous per-slot cache there is no batch axis — all
     sequences share the pool and address it through their block tables.
     Windowed layers use the same layout (absolute positions, window enforced
-    by masking) so one block table per sequence serves every layer.
+    by masking) so one block table per sequence serves every layer. With a
+    quantized ``cfg.kv_dtype`` the pool stores codes plus a parallel scale
+    pool (one float32 row per physical token, DESIGN.md §8) addressed by
+    the same block tables.
     """
     hd = cfg.resolved_head_dim()
+    if kv_quantized(cfg):
+        cd = kv_code_dtype(cfg.kv_dtype)
+        return {
+            "k": jnp.zeros((pool_tokens, cfg.num_kv_heads, hd), cd),
+            "v": jnp.zeros((pool_tokens, cfg.num_kv_heads, hd), cd),
+            "k_scale": jnp.zeros((pool_tokens, cfg.num_kv_heads), jnp.float32),
+            "v_scale": jnp.zeros((pool_tokens, cfg.num_kv_heads), jnp.float32),
+        }
     return {
         "k": jnp.zeros((pool_tokens, cfg.num_kv_heads, hd), dtype),
         "v": jnp.zeros((pool_tokens, cfg.num_kv_heads, hd), dtype),
@@ -179,14 +239,28 @@ def attn_paged_decode_step(params, pool, x1, cfg, lengths, rows, write_row,
         q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
     q = apply_rope(q[:, :, None, :], lengths[:, None, None], cfg.rope_base)[:, :, 0]
     k = apply_rope(k[:, :, None, :], lengths[:, None, None], cfg.rope_base)[:, :, 0]
-    k_pool = scatter_rows(pool["k"], write_row, k)
-    v_pool = scatter_rows(pool["v"], write_row, v)
-    o = dispatch_paged_decode(
-        AttentionSpec.from_config(cfg, window=window), q, k_pool, v_pool,
-        rows, lengths + 1,
-    )
+    spec = AttentionSpec.from_config(cfg, window=window)
+    if kv_quantized(cfg):
+        kq = quantize_kv(k, cfg.kv_dtype)
+        vq = quantize_kv(v, cfg.kv_dtype)
+        new_pool = {
+            "k": scatter_rows(pool["k"], write_row, kq.codes),
+            "v": scatter_rows(pool["v"], write_row, vq.codes),
+            "k_scale": scatter_rows(pool["k_scale"], write_row, kq.scale),
+            "v_scale": scatter_rows(pool["v_scale"], write_row, vq.scale),
+        }
+        o = dispatch_paged_decode(
+            spec, q, QuantKV(new_pool["k"], new_pool["k_scale"]),
+            QuantKV(new_pool["v"], new_pool["v_scale"]), rows, lengths + 1,
+        )
+    else:
+        new_pool = {"k": scatter_rows(pool["k"], write_row, k),
+                    "v": scatter_rows(pool["v"], write_row, v)}
+        o = dispatch_paged_decode(
+            spec, q, new_pool["k"], new_pool["v"], rows, lengths + 1,
+        )
     out = jnp.einsum("bhk,hkd->bd", o, params["wo"])
-    return {"k": k_pool, "v": v_pool}, out
+    return new_pool, out
 
 
 def attn_paged_prefill_step(params, pool, x, cfg, lengths, n_valid, rows,
@@ -206,22 +280,42 @@ def attn_paged_prefill_step(params, pool, x, cfg, lengths, n_valid, rows,
     positions = lengths[:, None] + idx                       # (B, C) absolute
     q, k, v = _project_qkv(params, x, cfg, positions)
     chunk_valid = idx < n_valid[:, None]
+    spec = AttentionSpec.from_config(cfg, window=window)
 
-    o = dispatch_paged_prefill(
-        AttentionSpec.from_config(cfg, window=window), q, k, v,
-        pool["k"], pool["v"], rows, q_positions=positions,
-        chunk_valid=chunk_valid, lengths=lengths,
-    )
+    def flat(t):  # (B, Hkv, C, ·) -> (B*C, Hkv, ·) token-major for scatter
+        return jnp.moveaxis(t, 1, 2).reshape((B * C, t.shape[1]) + t.shape[3:])
+
+    frows, fvalid = chunk_rows.reshape(-1), chunk_valid.reshape(-1)
+    if kv_quantized(cfg):
+        # the chunk is quantized once: its queries attend to the same
+        # dequantized values that land in the pool (and that decode reads)
+        kq = quantize_kv(k, cfg.kv_dtype)
+        vq = quantize_kv(v, cfg.kv_dtype)
+        o = dispatch_paged_prefill(
+            spec, q, QuantKV(kq.codes, kq.scale), QuantKV(vq.codes, vq.scale),
+            QuantKV(pool["k"], pool["k_scale"]),
+            QuantKV(pool["v"], pool["v_scale"]), rows,
+            q_positions=positions, chunk_valid=chunk_valid, lengths=lengths,
+        )
+        new_pool = {
+            "k": scatter_rows(pool["k"], frows, flat(kq.codes), fvalid),
+            "v": scatter_rows(pool["v"], frows, flat(vq.codes), fvalid),
+            "k_scale": scatter_rows(pool["k_scale"], frows, flat(kq.scale),
+                                    fvalid),
+            "v_scale": scatter_rows(pool["v_scale"], frows, flat(vq.scale),
+                                    fvalid),
+        }
+    else:
+        o = dispatch_paged_prefill(
+            spec, q, k, v, pool["k"], pool["v"], rows, q_positions=positions,
+            chunk_valid=chunk_valid, lengths=lengths,
+        )
+        new_pool = {
+            "k": scatter_rows(pool["k"], frows, flat(k), fvalid),
+            "v": scatter_rows(pool["v"], frows, flat(v), fvalid),
+        }
     out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
-
-    def flat(t):  # (B, Hkv, C, hd) -> (B*C, Hkv, hd) token-major for scatter
-        return jnp.moveaxis(t, 1, 2).reshape(B * C, t.shape[1], t.shape[-1])
-    return {
-        "k": scatter_rows(pool["k"], chunk_rows.reshape(-1), flat(k),
-                          chunk_valid.reshape(-1)),
-        "v": scatter_rows(pool["v"], chunk_rows.reshape(-1), flat(v),
-                          chunk_valid.reshape(-1)),
-    }, out
+    return new_pool, out
 
 
 def chunk_write(buf, new, positions, gate, *, axis=2):
@@ -275,13 +369,24 @@ def attn_prefill_step(params, cache, x, cfg, lengths, n_valid, *, window=None):
         cache_pos = jnp.broadcast_to(slot, (B, span))
     cache_valid = (cache_pos >= 0) & (cache_pos < lengths[:, None])
 
-    k_all = jnp.concatenate([cache["k"], k], axis=2)
-    v_all = jnp.concatenate([cache["v"], v], axis=2)
     kv_positions = jnp.concatenate([cache_pos, positions], axis=1)
     kv_valid = jnp.concatenate([cache_valid, chunk_valid], axis=1)
+    spec = AttentionSpec.from_config(cfg, window=window)
+    if kv_quantized(cfg):
+        # quantize the chunk once; [cache ++ chunk] stays in code+scale form
+        # all the way into the fused-dequant prefill backend
+        kq = quantize_kv(k, cfg.kv_dtype)
+        vq = quantize_kv(v, cfg.kv_dtype)
+        k_all = QuantKV(jnp.concatenate([cache["k"], kq.codes], axis=2),
+                        jnp.concatenate([cache["k_scale"], kq.scale], axis=2))
+        v_all = QuantKV(jnp.concatenate([cache["v"], vq.codes], axis=2),
+                        jnp.concatenate([cache["v_scale"], vq.scale], axis=2))
+    else:
+        k_all = jnp.concatenate([cache["k"], k], axis=2)
+        v_all = jnp.concatenate([cache["v"], v], axis=2)
 
     o = dispatch_prefill(
-        AttentionSpec.from_config(cfg, window=window), q, k_all, v_all,
+        spec, q, k_all, v_all,
         q_positions=positions, kv_positions=kv_positions, kv_valid=kv_valid,
     )
     out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
@@ -290,6 +395,13 @@ def attn_prefill_step(params, cache, x, cfg, lengths, n_valid, *, window=None):
     # `span` valid tokens survive — skip the rest to avoid duplicate slots
     gate = chunk_valid & (idx >= n_valid[:, None] - span)
     wpos = positions % span if window is not None else positions
+    if kv_quantized(cfg):
+        return {
+            "k": chunk_write(cache["k"], kq.codes, wpos, gate),
+            "v": chunk_write(cache["v"], vq.codes, wpos, gate),
+            "k_scale": chunk_write(cache["k_scale"], kq.scale, wpos, gate),
+            "v_scale": chunk_write(cache["v_scale"], vq.scale, wpos, gate),
+        }, out
     return {
         "k": chunk_write(cache["k"], k, wpos, gate),
         "v": chunk_write(cache["v"], v, wpos, gate),

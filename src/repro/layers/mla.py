@@ -5,6 +5,14 @@ cache stores only the KV latent + shared RoPE key (kv_lora_rank +
 qk_rope_dim per token instead of 2*H*hd). The attention core itself still
 routes through the backend registry so the ExpMul technique applies
 unchanged (DESIGN.md §4).
+
+With a quantized ``cfg.kv_dtype`` it is the **latent pool** that is
+quantized (DESIGN.md §8): codes + one float32 scale per token for each of
+``kv_lat`` and ``k_rope``, dequantized fused right before the up-projection
+``_expand_latents``. The expanded K/V the attention core sees are therefore
+always full precision — MLA specs pin ``kv_dtype="fp32"`` at dispatch so
+the registry's fake-quant axis never double-quantizes them — and latent
+compression composes with quantization exactly as it composes with paging.
 """
 from __future__ import annotations
 
@@ -13,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core.attention  # noqa: F401 — registers the built-in backends
+from repro.kernels.kvquant import gather_dequant_rows, quant_scatter_rows
 from repro.kernels.paged import gather_rows, scatter_rows
 from repro.kernels.registry import (
     AttentionSpec,
@@ -20,9 +29,15 @@ from repro.kernels.registry import (
     dispatch_decode,
     dispatch_prefill,
 )
-from repro.layers.attention_layer import chunk_write
+from repro.layers.attention_layer import chunk_write, kv_quantized
 from repro.layers.common import dense_init, rmsnorm, rmsnorm_init
 from repro.layers.rotary import apply_rope
+from repro.numerics.quant import (
+    dequantize_kv,
+    fake_quant_kv,
+    kv_code_dtype,
+    quantize_kv,
+)
 
 
 def mla_init(key, cfg, dtype):
@@ -67,11 +82,20 @@ def mla_apply(params, x, cfg, *, positions=None, causal=True, window=None):
     m = cfg.mla
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
-    q, k, v, _, _ = _mla_qkv(params, x, cfg, positions)
+    q, k, v, kv_lat, k_rope_raw = _mla_qkv(params, x, cfg, positions)
+    if kv_quantized(cfg):
+        # fake-quant the *latents* (the quantity a quantized cache stores)
+        # and re-expand, so forward() numerics match a latent-cache
+        # round-trip exactly — the MLA twin of the registry's ``*_q`` path
+        k_rope = apply_rope(k_rope_raw[:, None, :, :], positions[:, None, :],
+                            cfg.rope_base)[:, 0]
+        k, v = _expand_latents(
+            params, fake_quant_kv(kv_lat, cfg.kv_dtype),
+            fake_quant_kv(k_rope, cfg.kv_dtype), cfg)
     scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
     o = dispatch_attention(
-        AttentionSpec.from_config(cfg, window=window), q, k, v,
-        causal=causal, scale=scale,
+        AttentionSpec.from_config(cfg, window=window, kv_dtype="fp32"),
+        q, k, v, causal=causal, scale=scale,
     )
     return jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
 
@@ -79,6 +103,14 @@ def mla_apply(params, x, cfg, *, positions=None, causal=True, window=None):
 def mla_init_cache(cfg, batch, max_len, dtype):
     m = cfg.mla
     # latent cache: rank + rope dims per token (the MLA memory win)
+    if kv_quantized(cfg):
+        cd = kv_code_dtype(cfg.kv_dtype)
+        return {
+            "kv_lat": jnp.zeros((batch, max_len, m.kv_lora_rank), cd),
+            "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), cd),
+            "kv_lat_scale": jnp.zeros((batch, max_len), jnp.float32),
+            "k_rope_scale": jnp.zeros((batch, max_len), jnp.float32),
+        }
     return {
         "kv_lat": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
         "k_rope": jnp.zeros((batch, max_len, m.qk_rope_dim), dtype),
@@ -98,26 +130,45 @@ def mla_decode_step(params, cache, x1, cfg, lengths, *, window=None):
             lambda b, n, pp: jax.lax.dynamic_update_slice(b, n, (pp, 0))
         )(buf, new, p)
 
-    kv_lat_c = upd(cache["kv_lat"], kv_lat, lengths)
-    k_rope_c = upd(
-        cache["k_rope"],
-        apply_rope(k_rope_raw[:, None, :, :], pos[:, None], cfg.rope_base)[:, 0],
-        lengths,
-    )
+    def upd_scale(buf, new, p):  # (B, S) per-token scale buffer
+        return jax.vmap(
+            lambda b, n, pp: jax.lax.dynamic_update_slice(b, n, (pp,))
+        )(buf, new, p)
+
+    k_rope_new = apply_rope(
+        k_rope_raw[:, None, :, :], pos[:, None], cfg.rope_base)[:, 0]
+    if kv_quantized(cfg):
+        # quantize-on-write at the latent level; dequant fused on read just
+        # before the up-projection (DESIGN.md §8)
+        latq = quantize_kv(kv_lat, cfg.kv_dtype)
+        ropeq = quantize_kv(k_rope_new, cfg.kv_dtype)
+        new_cache = {
+            "kv_lat": upd(cache["kv_lat"], latq.codes, lengths),
+            "k_rope": upd(cache["k_rope"], ropeq.codes, lengths),
+            "kv_lat_scale": upd_scale(cache["kv_lat_scale"], latq.scale,
+                                      lengths),
+            "k_rope_scale": upd_scale(cache["k_rope_scale"], ropeq.scale,
+                                      lengths),
+        }
+        kv_lat_c = dequantize_kv(new_cache["kv_lat"],
+                                 new_cache["kv_lat_scale"], cfg.kv_dtype)
+        k_rope_c = dequantize_kv(new_cache["k_rope"],
+                                 new_cache["k_rope_scale"], cfg.kv_dtype)
+    else:
+        new_cache = {"kv_lat": upd(cache["kv_lat"], kv_lat, lengths),
+                     "k_rope": upd(cache["k_rope"], k_rope_new, lengths)}
+        kv_lat_c, k_rope_c = new_cache["kv_lat"], new_cache["k_rope"]
     # expand latents for attention (naive MLA decode; absorbed-matmul form is
     # a recorded beyond-paper optimization — EXPERIMENTS.md §Perf)
-    ukv = jnp.einsum("bsr,rhk->bhsk", kv_lat_c, params["w_ukv"])
-    k_nope, v = ukv[..., : m.qk_nope_dim], ukv[..., m.qk_nope_dim:]
-    k_rope = jnp.broadcast_to(
-        k_rope_c[:, None], (B, cfg.num_heads, k_rope_c.shape[1], m.qk_rope_dim)
-    )
-    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    k, v = _expand_latents(params, kv_lat_c, k_rope_c, cfg)
     scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
-    # the expanded-latent K is rebuilt per step (never a ring buffer): xla path
-    spec = AttentionSpec.from_config(cfg).replace(decode_impl="xla")
+    # the expanded-latent K is rebuilt per step (never a ring buffer): xla
+    # path; expanded K/V are full precision, so the quant axis is pinned off
+    spec = AttentionSpec.from_config(cfg, kv_dtype="fp32").replace(
+        decode_impl="xla")
     o = dispatch_decode(spec, q1, k, v, lengths + 1, scale=scale)
     out = jnp.einsum("bhk,hkd->bd", o, params["wo"])
-    return {"kv_lat": kv_lat_c, "k_rope": k_rope_c}, out
+    return new_cache, out
 
 
 def _expand_latents(params, kv_lat, k_rope, cfg):
@@ -135,8 +186,17 @@ def _expand_latents(params, kv_lat, k_rope, cfg):
 def mla_init_paged_cache(cfg, pool_tokens, dtype):
     """Flat-pool latent cache (DESIGN.md §7): the pool stores the *latents*
     (kv_lora_rank + qk_rope_dim per physical row), preserving the MLA memory
-    win — paging and latent compression compose."""
+    win — paging and latent compression compose. Quantized kv_dtypes store
+    latent codes plus parallel per-token scale pools (DESIGN.md §8)."""
     m = cfg.mla
+    if kv_quantized(cfg):
+        cd = kv_code_dtype(cfg.kv_dtype)
+        return {
+            "kv_lat": jnp.zeros((pool_tokens, m.kv_lora_rank), cd),
+            "k_rope": jnp.zeros((pool_tokens, m.qk_rope_dim), cd),
+            "kv_lat_scale": jnp.zeros((pool_tokens,), jnp.float32),
+            "k_rope_scale": jnp.zeros((pool_tokens,), jnp.float32),
+        }
     return {
         "kv_lat": jnp.zeros((pool_tokens, m.kv_lora_rank), dtype),
         "k_rope": jnp.zeros((pool_tokens, m.qk_rope_dim), dtype),
@@ -162,17 +222,33 @@ def mla_paged_decode_step(params, pool, x1, cfg, lengths, rows, write_row):
 
     k_rope_new = apply_rope(
         k_rope_raw[:, None, :, :], pos[:, None], cfg.rope_base)[:, 0, 0]
-    kv_lat_pool = scatter_rows(pool["kv_lat"], write_row, kv_lat[:, 0])
-    k_rope_pool = scatter_rows(pool["k_rope"], write_row, k_rope_new)
-
-    kv_lat_c = gather_rows(kv_lat_pool, rows)         # (B, L, rank)
-    k_rope_c = gather_rows(k_rope_pool, rows)         # (B, L, rope)
+    if kv_quantized(cfg):
+        lat_pool, lat_scale = quant_scatter_rows(
+            pool["kv_lat"], pool["kv_lat_scale"], write_row, kv_lat[:, 0],
+            kv_dtype=cfg.kv_dtype)
+        rope_pool, rope_scale = quant_scatter_rows(
+            pool["k_rope"], pool["k_rope_scale"], write_row, k_rope_new,
+            kv_dtype=cfg.kv_dtype)
+        new_pool = {"kv_lat": lat_pool, "k_rope": rope_pool,
+                    "kv_lat_scale": lat_scale, "k_rope_scale": rope_scale}
+        kv_lat_c = gather_dequant_rows(lat_pool, lat_scale, rows,
+                                       cfg.kv_dtype)  # (B, L, rank)
+        k_rope_c = gather_dequant_rows(rope_pool, rope_scale, rows,
+                                       cfg.kv_dtype)  # (B, L, rope)
+    else:
+        new_pool = {
+            "kv_lat": scatter_rows(pool["kv_lat"], write_row, kv_lat[:, 0]),
+            "k_rope": scatter_rows(pool["k_rope"], write_row, k_rope_new),
+        }
+        kv_lat_c = gather_rows(new_pool["kv_lat"], rows)  # (B, L, rank)
+        k_rope_c = gather_rows(new_pool["k_rope"], rows)  # (B, L, rope)
     k, v = _expand_latents(params, kv_lat_c, k_rope_c, cfg)
     scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
-    spec = AttentionSpec.from_config(cfg).replace(decode_impl="xla")
+    spec = AttentionSpec.from_config(cfg, kv_dtype="fp32").replace(
+        decode_impl="xla")
     o = dispatch_decode(spec, q1, k, v, lengths + 1, scale=scale)
     out = jnp.einsum("bhk,hkd->bd", o, params["wo"])
-    return {"kv_lat": kv_lat_pool, "k_rope": k_rope_pool}, out
+    return new_pool, out
 
 
 def mla_paged_prefill_step(params, pool, x, cfg, lengths, n_valid, rows,
@@ -194,12 +270,31 @@ def mla_paged_prefill_step(params, pool, x, cfg, lengths, n_valid, rows,
     q, k_chunk, v_chunk, kv_lat, k_rope_raw = _mla_qkv(params, x, cfg,
                                                        positions)
     chunk_valid = idx < n_valid[:, None]
+    k_rope_chunk = apply_rope(
+        k_rope_raw[:, None, :, :], positions[:, None], cfg.rope_base)[:, 0]
 
     L = rows.shape[1]
-    k_cache, v_cache = _expand_latents(
-        params, gather_rows(pool["kv_lat"], rows),
-        gather_rows(pool["k_rope"], rows), cfg,
-    )
+    quant = kv_quantized(cfg)
+    if quant:
+        # quantize the chunk's latents once; its queries attend to the same
+        # dequantized expansion that the pool (and later decode) will see
+        latq = quantize_kv(kv_lat, cfg.kv_dtype)
+        ropeq = quantize_kv(k_rope_chunk, cfg.kv_dtype)
+        k_chunk, v_chunk = _expand_latents(
+            params, dequantize_kv(latq.codes, latq.scale, cfg.kv_dtype),
+            dequantize_kv(ropeq.codes, ropeq.scale, cfg.kv_dtype), cfg)
+        k_cache, v_cache = _expand_latents(
+            params,
+            gather_dequant_rows(pool["kv_lat"], pool["kv_lat_scale"], rows,
+                                cfg.kv_dtype),
+            gather_dequant_rows(pool["k_rope"], pool["k_rope_scale"], rows,
+                                cfg.kv_dtype), cfg,
+        )
+    else:
+        k_cache, v_cache = _expand_latents(
+            params, gather_rows(pool["kv_lat"], rows),
+            gather_rows(pool["k_rope"], rows), cfg,
+        )
     k_all = jnp.concatenate([k_cache, k_chunk], axis=2)
     v_all = jnp.concatenate([v_cache, v_chunk], axis=2)
     hist_pos = jnp.broadcast_to(jnp.arange(L)[None, :], (B, L))
@@ -209,15 +304,25 @@ def mla_paged_prefill_step(params, pool, x, cfg, lengths, n_valid, rows,
 
     scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
     o = dispatch_prefill(
-        AttentionSpec.from_config(cfg), q, k_all, v_all, scale=scale,
+        AttentionSpec.from_config(cfg, kv_dtype="fp32"), q, k_all, v_all,
+        scale=scale,
         q_positions=positions, kv_positions=kv_positions, kv_valid=kv_valid,
     )
     out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
 
-    k_rope_chunk = apply_rope(
-        k_rope_raw[:, None, :, :], positions[:, None], cfg.rope_base)[:, 0]
     flat_rows = chunk_rows.reshape(-1)
     flat_valid = chunk_valid.reshape(-1)
+    if quant:
+        return {
+            "kv_lat": scatter_rows(pool["kv_lat"], flat_rows,
+                                   latq.codes.reshape(B * C, -1), flat_valid),
+            "k_rope": scatter_rows(pool["k_rope"], flat_rows,
+                                   ropeq.codes.reshape(B * C, -1), flat_valid),
+            "kv_lat_scale": scatter_rows(pool["kv_lat_scale"], flat_rows,
+                                         latq.scale.reshape(-1), flat_valid),
+            "k_rope_scale": scatter_rows(pool["k_rope_scale"], flat_rows,
+                                         ropeq.scale.reshape(-1), flat_valid),
+        }, out
     return {
         "kv_lat": scatter_rows(pool["kv_lat"], flat_rows,
                                kv_lat.reshape(B * C, -1), flat_valid),
@@ -243,11 +348,29 @@ def mla_prefill_step(params, cache, x, cfg, lengths, n_valid):
     idx = jnp.arange(C)[None, :]
     positions = lengths[:, None] + idx
     q, k_chunk, v_chunk, kv_lat, k_rope_raw = _mla_qkv(params, x, cfg, positions)
+    k_rope_chunk = apply_rope(
+        k_rope_raw[:, None, :, :], positions[:, None], cfg.rope_base
+    )[:, 0]
 
     span = cache["kv_lat"].shape[1]
-    k_cache, v_cache = _expand_latents(
-        params, cache["kv_lat"], cache["k_rope"], cfg
-    )
+    quant = kv_quantized(cfg)
+    if quant:
+        latq = quantize_kv(kv_lat, cfg.kv_dtype)
+        ropeq = quantize_kv(k_rope_chunk, cfg.kv_dtype)
+        k_chunk, v_chunk = _expand_latents(
+            params, dequantize_kv(latq.codes, latq.scale, cfg.kv_dtype),
+            dequantize_kv(ropeq.codes, ropeq.scale, cfg.kv_dtype), cfg)
+        k_cache, v_cache = _expand_latents(
+            params,
+            dequantize_kv(cache["kv_lat"], cache["kv_lat_scale"],
+                          cfg.kv_dtype),
+            dequantize_kv(cache["k_rope"], cache["k_rope_scale"],
+                          cfg.kv_dtype), cfg,
+        )
+    else:
+        k_cache, v_cache = _expand_latents(
+            params, cache["kv_lat"], cache["k_rope"], cfg
+        )
     k_all = jnp.concatenate([k_cache, k_chunk], axis=2)
     v_all = jnp.concatenate([v_cache, v_chunk], axis=2)
     slot = jnp.broadcast_to(jnp.arange(span)[None, :], (B, span))
@@ -257,18 +380,28 @@ def mla_prefill_step(params, cache, x, cfg, lengths, n_valid):
 
     scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
     o = dispatch_prefill(
-        AttentionSpec.from_config(cfg), q, k_all, v_all, scale=scale,
+        AttentionSpec.from_config(cfg, kv_dtype="fp32"), q, k_all, v_all,
+        scale=scale,
         q_positions=positions, kv_positions=kv_positions, kv_valid=kv_valid,
     )
     out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
 
-    k_rope_chunk = apply_rope(
-        k_rope_raw[:, None, :, :], positions[:, None], cfg.rope_base
-    )[:, 0]
-    new_cache = {
-        "kv_lat": chunk_write(cache["kv_lat"], kv_lat, positions,
-                              chunk_valid, axis=1),
-        "k_rope": chunk_write(cache["k_rope"], k_rope_chunk, positions,
-                              chunk_valid, axis=1),
-    }
+    if quant:
+        new_cache = {
+            "kv_lat": chunk_write(cache["kv_lat"], latq.codes, positions,
+                                  chunk_valid, axis=1),
+            "k_rope": chunk_write(cache["k_rope"], ropeq.codes, positions,
+                                  chunk_valid, axis=1),
+            "kv_lat_scale": chunk_write(cache["kv_lat_scale"], latq.scale,
+                                        positions, chunk_valid, axis=1),
+            "k_rope_scale": chunk_write(cache["k_rope_scale"], ropeq.scale,
+                                        positions, chunk_valid, axis=1),
+        }
+    else:
+        new_cache = {
+            "kv_lat": chunk_write(cache["kv_lat"], kv_lat, positions,
+                                  chunk_valid, axis=1),
+            "k_rope": chunk_write(cache["k_rope"], k_rope_chunk, positions,
+                                  chunk_valid, axis=1),
+        }
     return new_cache, out

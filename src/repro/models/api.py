@@ -231,6 +231,14 @@ def loss_fn(params, batch, cfg: ModelConfig, *, moe_impl="scatter"):
 # decode
 # ---------------------------------------------------------------------------
 def init_decode_state(cfg: ModelConfig, batch, max_len, *, enc_len=None):
+    """Contiguous per-slot decode state. With a quantized ``cfg.kv_dtype``
+    the attention-kind caches hold codes + parallel float32 scale buffers
+    (DESIGN.md §8); recurrent kinds keep full-precision state (bypassed,
+    as for paging) and encoder-decoder serving stays unquantized."""
+    if cfg.encoder_layers and cfg.kv_dtype != "fp32":
+        raise NotImplementedError(
+            "quantized KV serving targets decoder-only configs; encoder "
+            "cross-attention K/V are recomputed activations, not a cache")
     dt = _dtype(cfg)
 
     def stacked_cache(kind, n):
@@ -261,7 +269,9 @@ def init_paged_state(cfg: ModelConfig, slots, pool_blocks, page_size):
     Attention-kind caches become flat physical pools of
     ``pool_blocks * page_size`` token rows shared by all sequences (no slot
     axis — block tables map logical positions to rows); recurrent kinds keep
-    their per-slot O(1) state exactly as in ``init_decode_state``.
+    their per-slot O(1) state exactly as in ``init_decode_state``. With a
+    quantized ``cfg.kv_dtype`` each pool stores codes plus a parallel
+    per-token scale pool addressed by the same block tables (DESIGN.md §8).
     """
     if cfg.encoder_layers:
         raise NotImplementedError("paged serving targets decoder-only "

@@ -122,7 +122,9 @@ def block_init_paged_cache(cfg, kind, pool_tokens, slots, dtype):
 
     Attention kinds share the flat physical token pool (no batch axis —
     sequences address it through block tables); recurrent kinds keep their
-    O(1) per-slot state and bypass paging entirely.
+    O(1) per-slot state and bypass paging entirely — and likewise bypass
+    KV quantization (``cfg.kv_dtype``): only attention-kind pools carry
+    code + scale buffers (DESIGN.md §8).
     """
     if kind == "attn":
         if cfg.mla:

@@ -1,0 +1,142 @@
+"""KV-cache quantization codecs: symmetric per-row int8 and e4m3 fp8.
+
+This module is the normative statement of the **KV quantization numerics
+contract** (DESIGN.md §8), mirroring the ExpMul contract in
+``numerics/log2exp.py``: one reference codec, shared bit-exactly by every
+attention path that touches a quantized cache — full-sequence fake-quant
+(``*_q`` registry impls), contiguous prefill/decode, and the paged
+gather/scatter paths (``repro.kernels.kvquant``).
+
+Layout
+------
+A KV tensor is quantized along its **last axis** (the head/latent feature
+dim): one float32 scale per row, codes in the row's storage dtype. For a
+GQA cache row that means one scale per *(token, kv-head)*; for an MLA
+latent row one scale per *token*. Because KV-cache blocks are token-major
+(``kernels/paged.py``), a physical block of ``page_size`` tokens carries a
+parallel block of ``page_size`` scale rows — the "scale pool" accounted by
+``serve.paged.BlockPool``.
+
+Codecs, clause by clause
+------------------------
+* **Symmetric, zero-point-free.** ``scale = amax / Q`` with
+  ``amax = max|x|`` over the row and ``Q = 127`` (int8) or ``448`` (fp8
+  e4m3fn max-normal). Attention K/V are zero-centered post-RoPE, so an
+  asymmetric zero point buys nothing and would break the fused
+  dequant-into-matmul form (codes * scale is a single fma).
+* **All-zero rows.** ``amax == 0`` encodes with ``scale = 1`` so the codes
+  are exactly 0 and dequant returns exact zeros (fresh cache rows stay
+  exactly zero through a quantized round-trip).
+* **int8**: ``codes = clip(round(x / scale), -127, 127)`` (round half to
+  even, the IEEE default — jnp.round). -128 is unused (symmetry).
+  **Error bound:** ``|x - dq(q(x))| <= scale/2 = amax/254`` per element,
+  i.e. ≤ 0.394% of the row's amax; mean |err| ≈ amax/508 for smooth
+  inputs. Relative error is unbounded only for elements ≪ amax (they
+  quantize to 0), which attention tolerates: such elements contribute
+  O(amax/254) to a score dot product regardless.
+* **fp8 (e4m3fn)**: ``codes = clip(x / scale, -448, 448)`` cast to
+  ``float8_e4m3fn`` (4 exponent bits, bias 7, 3 mantissa bits, max normal
+  448, min normal 2^-6, subnormals down to 2^-9; no inf, single NaN —
+  never produced here because we clip first). **Error bound:** for normal
+  magnitudes ``|y| >= 2^-6`` the cast is round-to-nearest-even with
+  relative error ≤ 2^-4 = 6.25% (half ulp of a 3-bit mantissa); below
+  2^-6 absolute error ≤ 2^-10, i.e. ≤ amax · 2^-10/448 ≈ 2.2e-6 · amax.
+  Versus int8: worse near amax (6.25% vs 0.39% relative), far better for
+  small-magnitude elements — fp8 keeps ~relative precision across the
+  row, int8 keeps absolute precision. Both land within bf16-accumulator
+  noise after softmax renormalization; end-to-end fidelity is measured by
+  the exact-match-rate column of ``benchmarks/serve_throughput.py``.
+* **Scales are float32** regardless of the model dtype: a scale error
+  multiplies every element of the row, so it is kept at full precision
+  (4 bytes per row — the "+4" in ``serve.paged.kv_token_bytes``).
+* **Dequant target is float32.** ``dq = codes.astype(f32) * scale`` feeds
+  the attention score/value matmuls, which already accumulate in f32 on
+  every path; the quantized cache therefore changes *storage*, never the
+  accumulator precision.
+
+All functions are jit-safe and CPU/TPU portable.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+KV_DTYPES = ("fp32", "int8", "fp8")
+QUANT_KV_DTYPES = ("int8", "fp8")
+
+INT8_QMAX = 127.0
+FP8_QMAX = 448.0    # e4m3fn max normal
+
+
+class QuantKV(NamedTuple):
+    """A quantized KV operand: codes + per-row (last-axis) float32 scales.
+
+    ``codes.shape == scale.shape + (row_dim,)``. NamedTuple => a pytree, so
+    it threads through jit / dispatch untouched.
+    """
+
+    codes: jnp.ndarray
+    scale: jnp.ndarray
+
+
+def kv_code_dtype(kv_dtype: str):
+    """Storage dtype of the code array for a quantized kv_dtype."""
+    if kv_dtype == "int8":
+        return jnp.int8
+    if kv_dtype == "fp8":
+        return jnp.float8_e4m3fn
+    raise ValueError(f"kv_dtype {kv_dtype!r} has no code dtype "
+                     f"(quantized dtypes: {QUANT_KV_DTYPES})")
+
+
+def kv_code_bytes(kv_dtype: str) -> int:
+    """Bytes per stored element (1 for both int8 and fp8)."""
+    return jnp.dtype(kv_code_dtype(kv_dtype)).itemsize
+
+
+def _row_scale(x, qmax):
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    return jnp.where(amax > 0, amax / qmax, 1.0)
+
+
+def quantize_kv(x, kv_dtype: str) -> QuantKV:
+    """Encode ``x`` along its last axis. Returns codes + float32 scales.
+
+    x: (..., D) any float dtype; codes: (..., D) in ``kv_code_dtype``;
+    scale: (...,) float32. See the module contract for the error bounds.
+    """
+    x = x.astype(jnp.float32)
+    if kv_dtype == "int8":
+        scale = _row_scale(x, INT8_QMAX)
+        y = x / scale[..., None]
+        codes = jnp.clip(jnp.round(y), -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+        return QuantKV(codes, scale)
+    if kv_dtype == "fp8":
+        scale = _row_scale(x, FP8_QMAX)
+        y = jnp.clip(x / scale[..., None], -FP8_QMAX, FP8_QMAX)
+        return QuantKV(y.astype(jnp.float8_e4m3fn), scale)
+    raise ValueError(f"cannot quantize to kv_dtype {kv_dtype!r}")
+
+
+def dequantize_kv(codes, scale, kv_dtype: str = "int8"):
+    """Decode codes + scales back to float32 (the fused-dequant primitive).
+
+    One multiply per element — XLA fuses it into the consuming score /
+    value matmul, so the full-precision K/V never round-trips through
+    memory (kv_dtype is accepted for symmetry/validation only; both codecs
+    decode as ``codes * scale``).
+    """
+    if kv_dtype not in QUANT_KV_DTYPES:
+        raise ValueError(f"cannot dequantize kv_dtype {kv_dtype!r}")
+    return codes.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+
+
+def fake_quant_kv(x, kv_dtype: str):
+    """Quantize-then-dequantize (the full-sequence ``*_q`` path).
+
+    Bit-identical to a round-trip through a quantized cache: the same
+    codec, the same per-row scale granularity, the same f32 dequant.
+    """
+    q = quantize_kv(x, kv_dtype)
+    return dequantize_kv(q.codes, q.scale, kv_dtype).astype(x.dtype)

@@ -39,6 +39,21 @@ Both layouts run the same scheduler and sampling sequence, so with an
 adequately sized pool the paged engine emits bit-identical token streams to
 the contiguous one. ``chunk_size=1`` falls back to the legacy behavior:
 prompts are teacher-forced one token per tick through the decode graph.
+
+``kv_dtype`` selects the KV-cache storage precision (DESIGN.md §8):
+"fp32" (unquantized, the default — streams bit-identical to earlier PRs),
+or "int8"/"fp8" which store codes + per-row float32 scales and attend
+through the registry's fused-dequant ``*_q`` backends. For a paged engine
+an explicit ``pool_blocks`` is an **unquantized-equivalent byte budget**
+(what that many blocks cost at ``kv_dtype="fp32"``, i.e. stored in
+``cfg.dtype``): the same bytes hold more blocks quantized — ~3.2x for
+float32-served models (codes are 1 byte; the f32 scale rows take the
+rest), ~1.9x when the unquantized cache would be bfloat16 — so
+quantization multiplies co-resident tokens (and cuts preemptions)
+instead of shrinking the footprint silently. ``memory_stats()`` reports
+both token and real-byte accounting (codes + scale pools). Quantized
+dtypes are valid only for attention-only decoder configs — see
+``validate_kv_dtype``.
 """
 from __future__ import annotations
 
@@ -56,8 +71,48 @@ from repro.models.api import (
     prefill,
     prefill_paged,
 )
-from repro.serve.paged import BlockPool, blocks_for
+from repro.numerics.quant import KV_DTYPES
+from repro.serve.paged import BlockPool, blocks_for, kv_token_bytes
 from repro.serve.sampling import sample_token
+
+
+def stream_match_rate(ref_streams, streams) -> float:
+    """Token-level exact-match rate across paired temp-0 streams (the
+    quantized-KV fidelity metric — DESIGN.md §8)."""
+    return float(np.mean([
+        np.mean([a == b for a, b in zip(x, y)]) if len(x) else 1.0
+        for x, y in zip(ref_streams, streams)
+    ]))
+
+
+def validate_kv_dtype(cfg, kv_dtype: str | None = None) -> str:
+    """Resolve and validate a KV-cache storage dtype for serving ``cfg``.
+
+    Quantized dtypes require an attention-only decoder: recurrent block
+    kinds (rglru/mlstm/slstm) carry O(1) state that is not a KV cache, and
+    encoder-decoder cross K/V are recomputed activations — both would
+    silently bypass quantization, so they are rejected loudly instead
+    (DESIGN.md §8). Returns the resolved dtype string.
+    """
+    kv_dtype = kv_dtype or cfg.kv_dtype
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"unknown kv_dtype {kv_dtype!r}; "
+                         f"choose one of {KV_DTYPES}")
+    if kv_dtype != "fp32":
+        rec = sorted(set(cfg.block_pattern) - {"attn"})
+        if rec:
+            raise ValueError(
+                f"kv_dtype={kv_dtype!r} requires an attention-only block "
+                f"pattern, but {cfg.name!r} mixes in {rec} blocks whose "
+                f"recurrent state is not a KV cache and would silently "
+                f"bypass quantization; serve this arch with kv_dtype='fp32'")
+        if cfg.encoder_layers:
+            raise ValueError(
+                f"kv_dtype={kv_dtype!r} targets decoder-only configs; "
+                f"{cfg.name!r} is encoder-decoder and its cross-attention "
+                f"K/V are recomputed activations, not a cache — serve it "
+                f"with kv_dtype='fp32'")
+    return kv_dtype
 
 
 @dataclasses.dataclass
@@ -81,8 +136,11 @@ class ServeEngine:
                  chunk_size: int = 64, temperature: float = 0.0,
                  seed: int = 0, kv_layout: str = "contiguous",
                  page_size: int | None = None,
-                 pool_blocks: int | None = None):
+                 pool_blocks: int | None = None,
+                 kv_dtype: str | None = None):
         assert kv_layout in ("contiguous", "paged"), kv_layout
+        self.kv_dtype = validate_kv_dtype(cfg, kv_dtype)
+        cfg = cfg.replace(kv_dtype=self.kv_dtype)
         self.params = params
         self.cfg = cfg
         self.slots = slots
@@ -92,12 +150,27 @@ class ServeEngine:
         self.key = jax.random.PRNGKey(seed)
         self.kv_layout = kv_layout
         self.paged = kv_layout == "paged"
+        # bytes per resident token across all attention layers (codes +
+        # scale pools for quantized dtypes) — the unit of every *_bytes stat
+        self.token_bytes = kv_token_bytes(cfg, self.kv_dtype)
         if self.paged:
             ps = int(page_size or cfg.page_size)
             max_blocks = blocks_for(max_len, ps)
-            n_pool = int(pool_blocks or cfg.pool_blocks or slots * max_blocks)
+            requested = int(pool_blocks or cfg.pool_blocks or 0)
+            if requested:
+                # ``pool_blocks`` is an unquantized-equivalent byte
+                # budget (what that many blocks cost at kv_dtype="fp32",
+                # i.e. stored in cfg.dtype): a quantized pool spends the
+                # same bytes on proportionally more physical blocks — the
+                # KV-quantization capacity win (DESIGN.md §8; ~3.2x for
+                # float32-served models, ~1.9x for bfloat16 caches)
+                n_pool = max(1, requested * kv_token_bytes(cfg, "fp32")
+                             // self.token_bytes)
+            else:
+                n_pool = slots * max_blocks  # fully provisioned
             self.page_size = ps
-            self.pool = BlockPool(n_pool, ps, slots, max_blocks)
+            self.pool = BlockPool(n_pool, ps, slots, max_blocks,
+                                  token_bytes=self.token_bytes)
             self.state = init_paged_state(cfg, slots, n_pool, ps)
             self._decode = jax.jit(
                 lambda params, state, toks, lens, bt: decode_step_paged(
@@ -373,11 +446,22 @@ class ServeEngine:
     def memory_stats(self) -> dict:
         st = {
             "kv_layout": self.kv_layout,
+            "kv_dtype": self.kv_dtype,
+            "kv_token_bytes": int(self.token_bytes),
             "kv_reserved_tokens": int(self.kv_reserved_tokens()),
             "kv_peak_used_tokens": int(self.peak_kv_used_tokens),
             "kv_peak_active_tokens": int(self.peak_active_tokens),
             "kv_tokens_per_active_token": (
                 self.peak_kv_used_tokens / self.peak_active_tokens
+                if self.peak_active_tokens else 0.0),
+            # real bytes (codes + scale pools): the cross-dtype comparison
+            "kv_reserved_bytes": int(self.kv_reserved_tokens()
+                                     * self.token_bytes),
+            "kv_peak_used_bytes": int(self.peak_kv_used_tokens
+                                      * self.token_bytes),
+            "kv_bytes_per_active_token": (
+                self.peak_kv_used_tokens * self.token_bytes
+                / self.peak_active_tokens
                 if self.peak_active_tokens else 0.0),
             "preemptions": int(self.preemptions),
             "recompute_tokens": int(self.recompute_tokens),

@@ -37,6 +37,40 @@ def blocks_for(n_tokens: int, page_size: int) -> int:
     return -(-int(n_tokens) // page_size)
 
 
+def kv_token_bytes(cfg, kv_dtype: str | None = None) -> int:
+    """Bytes of KV-cache storage per resident token, summed over every
+    attention layer of ``cfg`` (recurrent kinds hold no KV and count 0).
+
+    For quantized kv_dtypes this is codes + the parallel scale rows
+    (DESIGN.md §8): a GQA layer stores ``2 * Hkv * hd`` one-byte codes plus
+    ``2 * Hkv`` float32 scales per token; an MLA layer stores
+    ``kv_lora_rank + qk_rope_dim`` codes plus two float32 scales (one per
+    latent row). This is the unit behind ``BlockPool`` byte accounting and
+    the engine's unquantized-equivalent pool sizing (note: the unquantized
+    baseline is ``cfg.dtype`` — 4 B/elem for float32-served models, 2 B
+    for bfloat16, which halves the quantized capacity multiplier).
+    """
+    import jax.numpy as jnp
+
+    from repro.numerics.quant import QUANT_KV_DTYPES, kv_code_bytes
+
+    kv_dtype = kv_dtype if kv_dtype is not None else cfg.kv_dtype
+    quant = kv_dtype in QUANT_KV_DTYPES
+    elem = kv_code_bytes(kv_dtype) if quant else jnp.dtype(cfg.dtype).itemsize
+    total = 0
+    for kind in cfg.pattern_for():
+        if kind != "attn":
+            continue
+        if cfg.mla is not None:
+            rows = 2                               # kv_lat + k_rope
+            feats = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_dim
+        else:
+            rows = 2 * cfg.num_kv_heads            # K + V rows per token
+            feats = rows * cfg.resolved_head_dim()
+        total += feats * elem + (rows * 4 if quant else 0)  # f32 scales
+    return total
+
+
 @dataclasses.dataclass
 class PoolStats:
     """Cumulative allocator statistics (exported into BENCH_serve.json)."""
@@ -56,12 +90,16 @@ class BlockPool:
     """
 
     def __init__(self, pool_blocks: int, page_size: int, slots: int,
-                 max_blocks_per_seq: int):
+                 max_blocks_per_seq: int, token_bytes: int = 0):
         assert pool_blocks > 0 and page_size > 0
         self.pool_blocks = pool_blocks
         self.page_size = page_size
         self.slots = slots
         self.max_blocks_per_seq = max_blocks_per_seq
+        # bytes per resident token across all attention layers, including
+        # the parallel scale pool for quantized kv_dtypes (kv_token_bytes);
+        # 0 = unknown, byte properties report 0
+        self.token_bytes = token_bytes
         self.sentinel = pool_blocks
         # LIFO free list: lowest ids at the end so fresh allocations are
         # deterministic (block 0 first) — handy for tests and reproducibility
@@ -79,6 +117,16 @@ class BlockPool:
     @property
     def free_block_count(self) -> int:
         return len(self.free_blocks)
+
+    @property
+    def used_bytes(self) -> int:
+        """Real bytes resident in live blocks (codes + scale pools)."""
+        return self.used_blocks * self.page_size * self.token_bytes
+
+    @property
+    def reserved_bytes(self) -> int:
+        """Real bytes of the whole pool allocation (codes + scale pools)."""
+        return self.pool_blocks * self.page_size * self.token_bytes
 
     def utilization(self) -> float:
         return self.used_blocks / self.pool_blocks

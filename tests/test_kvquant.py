@@ -1,0 +1,351 @@
+"""Quantized KV-cache subsystem (DESIGN.md §8): codec error bounds,
+quantized prefill/decode/paged parity, engine capacity + stream fidelity,
+and scale-pool byte accounting.
+
+Exactness contract: quantized prefill+decode must reproduce the *quantized
+forward* pass (the registry's fake-quant ``*_q`` full-sequence impls) to
+fp32 tolerance across every cache family — the quantization error shows up
+once, at the codec, never a second time in the serving plumbing. Against
+the fp32 forward pass the drift is bounded by the documented codec error.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # property tests need hypothesis; everything else below does not
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.configs import get_config
+from repro.models.api import (
+    decode_step,
+    decode_step_paged,
+    forward,
+    init_decode_state,
+    init_model,
+    init_paged_state,
+    prefill,
+    prefill_paged,
+)
+from repro.numerics.quant import (
+    FP8_QMAX,
+    INT8_QMAX,
+    dequantize_kv,
+    fake_quant_kv,
+    kv_code_dtype,
+    quantize_kv,
+)
+from repro.serve.engine import ServeEngine, validate_kv_dtype
+from repro.serve.paged import BlockPool, blocks_for, kv_token_bytes
+
+# (arch, variant, window override, kv_dtype): every cache family the
+# registry serves x the paper's ExpMul variant x both quantized dtypes
+FAMILIES = [
+    ("qwen2-0.5b", "exact", None, "int8"),     # GQA + qkv bias
+    ("qwen2-0.5b", "exact", None, "fp8"),      # e4m3 codec
+    ("qwen2-0.5b", "expmul", None, "int8"),    # the paper's variant
+    ("minicpm3-4b", "exact", None, "int8"),    # MLA latent pool, Dq != Dv
+    ("qwen2-0.5b", "exact", 6, "int8"),        # rolling windowed cache
+]
+
+
+def _tol(variant):
+    """Serving-vs-forward tolerance. ExpMul's power-of-two softmax weights
+    turn ~1e-7 score-reassociation differences between the full and masked
+    kernels into discrete L_hat rounding flips (a factor-2 weight jump on
+    isolated elements), so the expmul families carry a wider bound."""
+    return dict(atol=2e-3, rtol=2e-3) if variant == "expmul" else \
+        dict(atol=1e-4, rtol=1e-4)
+
+
+def _setup(arch, variant="exact", window=None, kv_dtype="fp32"):
+    over = {"attention_variant": variant, "kv_dtype": kv_dtype}
+    if window is not None:
+        over["window"] = window
+    cfg = get_config(arch, smoke=True, dtype="float32", param_dtype="float32",
+                     **over)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+# ---------------------------------------------------------------------------
+# codec: shapes, zeros, and the documented error bounds
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_codec_roundtrip_shapes_and_zero_rows(kv_dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 2, 5, 8)) * 4.0
+    x = x.at[1, 0].set(0.0)  # an all-zero row must round-trip exactly
+    q = quantize_kv(x, kv_dtype)
+    assert q.codes.shape == x.shape and q.codes.dtype == kv_code_dtype(kv_dtype)
+    assert q.scale.shape == x.shape[:-1] and q.scale.dtype == jnp.float32
+    dq = dequantize_kv(q.codes, q.scale, kv_dtype)
+    assert dq.dtype == jnp.float32
+    assert float(jnp.max(jnp.abs(dq[1, 0]))) == 0.0
+    # per-row amax-relative error bounds from the numerics contract
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    err = jnp.abs(dq - x)
+    if kv_dtype == "int8":
+        assert bool(jnp.all(err <= amax / (2 * INT8_QMAX) + 1e-6))
+    else:
+        # elementwise: rel err <= 2^-4 for normals, tiny absolute below
+        bound = jnp.maximum(jnp.abs(x) * 2.0**-4, amax / FP8_QMAX * 2.0**-9)
+        assert bool(jnp.all(err <= bound + 1e-6))
+
+
+def test_codec_int8_uses_full_range():
+    x = jnp.array([[1.0, -2.0, 0.5, 2.0]])
+    q = quantize_kv(x, "int8")
+    assert int(jnp.max(jnp.abs(q.codes.astype(jnp.int32)))) == 127
+    np.testing.assert_allclose(np.asarray(q.scale), [2.0 / 127], rtol=1e-6)
+
+
+def test_fake_quant_is_cache_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 7)) * 3.0
+    for kv_dtype in ("int8", "fp8"):
+        q = quantize_kv(x, kv_dtype)
+        np.testing.assert_array_equal(
+            np.asarray(fake_quant_kv(x, kv_dtype)),
+            np.asarray(dequantize_kv(q.codes, q.scale, kv_dtype)))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(
+        rows=st.integers(1, 8), d=st.integers(1, 32),
+        scale=st.floats(1e-20, 1e20), seed=st.integers(0, 2**31 - 1),
+        kv_dtype=st.sampled_from(["int8", "fp8"]),
+    )
+    def test_codec_error_bound_property(rows, d, scale, seed, kv_dtype):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (rows, d),
+                              jnp.float32) * scale
+        q = quantize_kv(x, kv_dtype)
+        dq = dequantize_kv(q.codes, q.scale, kv_dtype)
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        err = jnp.abs(dq - x)
+        if kv_dtype == "int8":
+            bound = amax / (2 * INT8_QMAX)
+        else:
+            bound = jnp.maximum(jnp.abs(x) * 2.0**-4,
+                                amax / FP8_QMAX * 2.0**-9)
+        assert bool(jnp.all(err <= bound * (1 + 1e-5) + 1e-30)), (
+            float(jnp.max(err - bound)))
+
+
+# ---------------------------------------------------------------------------
+# API level: quantized prefill + decode == quantized forward, every family
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch,variant,window,kv_dtype", FAMILIES)
+def test_quant_prefill_plus_decode_matches_quant_forward(arch, variant,
+                                                         window, kv_dtype):
+    params, cfg = _setup(arch, variant, window, kv_dtype)
+    B, S, C = 2, 12, 5
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 1, cfg.vocab_size)
+    ref = forward(params, {"tokens": toks}, cfg)          # quantized forward
+    ref32 = forward(params, {"tokens": toks},
+                    cfg.replace(kv_dtype="fp32"))         # fp32 forward
+    # quantization perturbs logits by the codec bound, not more (loose but
+    # meaningful: a broken scale path inflates this by orders of magnitude)
+    assert float(jnp.max(jnp.abs(ref - ref32))) < 0.5
+
+    state = init_decode_state(cfg, B, 64)
+    lengths = jnp.zeros((B,), jnp.int32)
+    npre = S - 2
+    for start in range(0, npre, C):
+        take = min(C, npre - start)
+        chunk = jnp.zeros((B, C), jnp.int32)
+        chunk = chunk.at[:, :take].set(toks[:, start:start + take])
+        logits, state = prefill(params, state, chunk, lengths,
+                                jnp.full((B,), take, jnp.int32), cfg)
+        lengths = lengths + take
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref[:, npre - 1]),
+                               **_tol(variant))
+    for i in range(npre, S):
+        logits, state = decode_step(params, state, toks[:, i],
+                                    jnp.full((B,), i, jnp.int32), cfg)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(ref[:, i]),
+                                   **_tol(variant))
+
+
+@pytest.mark.parametrize("arch,variant,window,kv_dtype", FAMILIES)
+def test_quant_paged_matches_quant_forward_shuffled_tables(arch, variant,
+                                                           window, kv_dtype):
+    params, cfg = _setup(arch, variant, window, kv_dtype)
+    B, S, C, ps = 2, 12, 5, 8
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 1, cfg.vocab_size)
+    ref = forward(params, {"tokens": toks}, cfg)
+
+    max_blocks = blocks_for(64, ps)
+    pool_blocks = 2 * max_blocks + 3
+    state = init_paged_state(cfg, B, pool_blocks, ps)
+    perm = np.random.default_rng(0).permutation(pool_blocks)
+    bt = jnp.asarray(np.stack([perm[:max_blocks],
+                               perm[max_blocks:2 * max_blocks]]).astype(np.int32))
+    lengths = jnp.zeros((B,), jnp.int32)
+    npre = S - 2
+    for start in range(0, npre, C):
+        take = min(C, npre - start)
+        chunk = jnp.zeros((B, C), jnp.int32)
+        chunk = chunk.at[:, :take].set(toks[:, start:start + take])
+        logits, state = prefill_paged(params, state, chunk, lengths,
+                                      jnp.full((B,), take, jnp.int32), bt,
+                                      cfg, page_size=ps)
+        lengths = lengths + take
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref[:, npre - 1]),
+                               **_tol(variant))
+    for i in range(npre, S):
+        logits, state = decode_step_paged(params, state, toks[:, i],
+                                          jnp.full((B,), i, jnp.int32), bt,
+                                          cfg, page_size=ps)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(ref[:, i]),
+                                   **_tol(variant))
+
+
+# ---------------------------------------------------------------------------
+# engine level: capacity, stream fidelity, preemption stability
+# ---------------------------------------------------------------------------
+def test_engine_int8_paged_capacity_and_stream_match():
+    """The acceptance criterion: at the same ``pool_blocks`` byte budget an
+    int8 paged engine reserves >= 1.9x the co-resident tokens of fp32, with
+    temp-0 streams matching fp32 at >= 99% token exact-match on a
+    benchmark-style mixed prompt set (serve_throughput.mixed_prompts)."""
+    params, cfg = _setup("qwen2-0.5b")
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(1, cfg.vocab_size, size=max(4, 64 >> i)))
+               for i in range(4)]  # 64/32/16/8: mixed-length traffic
+
+    stats, streams = {}, {}
+    for kv_dtype in ("fp32", "int8"):
+        eng = ServeEngine(params, cfg, slots=4, max_len=128, chunk_size=32,
+                          kv_layout="paged", page_size=16, pool_blocks=8,
+                          kv_dtype=kv_dtype)
+        reqs = [eng.submit(p, 8, rid=i) for i, p in enumerate(prompts)]
+        eng.run()
+        assert all(r.done for r in reqs)
+        stats[kv_dtype] = eng.memory_stats()
+        streams[kv_dtype] = ([r.out for r in reqs], eng.preemptions)
+
+    assert (stats["int8"]["kv_reserved_tokens"]
+            >= 1.9 * stats["fp32"]["kv_reserved_tokens"])
+    # same unquantized-equivalent budget: reserved *bytes* stay comparable
+    assert (stats["int8"]["kv_reserved_bytes"]
+            <= stats["fp32"]["kv_reserved_bytes"])
+    # the extra capacity is real: the tight budget preempts fp32, not int8
+    assert streams["int8"][1] <= streams["fp32"][1]
+    n = sum(len(s) for s in streams["fp32"][0])
+    matches = sum(a == b
+                  for x, y in zip(streams["fp32"][0], streams["int8"][0])
+                  for a, b in zip(x, y))
+    assert matches / n >= 0.99, f"exact-match {matches}/{n}"
+
+
+def test_engine_int8_paged_preemption_requeue_preserves_streams():
+    """A pool too small for all int8 slots must preempt-and-requeue without
+    changing any token stream vs a fully provisioned int8 engine."""
+    params, cfg = _setup("qwen2-0.5b")
+    rng = np.random.default_rng(1)
+    prompts = [list(rng.integers(1, 200, size=n)) for n in (9, 21, 6, 13, 17)]
+
+    ref = ServeEngine(params, cfg, slots=3, max_len=64, chunk_size=8,
+                      kv_layout="paged", page_size=4, kv_dtype="int8")
+    rr = [ref.submit(p, 6, rid=i) for i, p in enumerate(prompts)]
+    ref.run()
+
+    # a 4-block unquantized budget expands to ~12 int8 blocks: tight enough to
+    # force preemption of 3 slots x ~20+ resident tokens at page_size=4
+    tight = ServeEngine(params, cfg, slots=3, max_len=64, chunk_size=8,
+                        kv_layout="paged", page_size=4, pool_blocks=4,
+                        kv_dtype="int8")
+    tr = [tight.submit(p, 6, rid=i) for i, p in enumerate(prompts)]
+    tight.run()
+
+    assert all(r.done for r in tr)
+    assert tight.preemptions > 0
+    assert tight.pool.stats.evictions == tight.preemptions
+    assert tight.pool.used_blocks == 0
+    assert [r.out for r in rr] == [r.out for r in tr]
+
+
+def test_engine_contiguous_quant_matches_paged_quant():
+    params, cfg = _setup("qwen2-0.5b", "expmul")
+    for kv_dtype in ("int8", "fp8"):
+        cont = ServeEngine(params, cfg, slots=2, max_len=32, chunk_size=4,
+                           kv_dtype=kv_dtype)
+        cr = [cont.submit([1, 2, 3, 4, 5], 5, rid=i) for i in range(3)]
+        cont.run()
+        paged = ServeEngine(params, cfg, slots=2, max_len=32, chunk_size=4,
+                            kv_layout="paged", page_size=4, kv_dtype=kv_dtype)
+        pr = [paged.submit([1, 2, 3, 4, 5], 5, rid=i) for i in range(3)]
+        paged.run()
+        assert [r.out for r in cr] == [r.out for r in pr], kv_dtype
+
+
+def test_validate_kv_dtype_rejects_bad_combos():
+    _, hybrid = _setup("recurrentgemma-2b")
+    with pytest.raises(ValueError, match="attention-only"):
+        validate_kv_dtype(hybrid, "int8")
+    _, qwen = _setup("qwen2-0.5b")
+    with pytest.raises(ValueError, match="unknown kv_dtype"):
+        validate_kv_dtype(qwen, "int4")
+    assert validate_kv_dtype(hybrid, "fp32") == "fp32"
+    assert validate_kv_dtype(qwen, "fp8") == "fp8"
+    # the engine applies the same validation
+    with pytest.raises(ValueError, match="attention-only"):
+        ServeEngine(None, hybrid, kv_dtype="int8")
+
+
+# ---------------------------------------------------------------------------
+# scale-pool / byte accounting units
+# ---------------------------------------------------------------------------
+def test_kv_token_bytes_units():
+    _, cfg = _setup("qwen2-0.5b")
+    Hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim()
+    n_attn = sum(k == "attn" for k in cfg.pattern_for())
+    assert kv_token_bytes(cfg, "fp32") == n_attn * 2 * Hkv * hd * 4
+    # codes (1 B) + one f32 scale per K row and per V row
+    assert kv_token_bytes(cfg, "int8") == n_attn * 2 * Hkv * (hd + 4)
+    assert kv_token_bytes(cfg, "fp8") == kv_token_bytes(cfg, "int8")
+
+    _, mla = _setup("minicpm3-4b")
+    feats = mla.mla.kv_lora_rank + mla.mla.qk_rope_dim
+    n_attn = sum(k == "attn" for k in mla.pattern_for())
+    assert kv_token_bytes(mla, "fp32") == n_attn * feats * 4
+    assert kv_token_bytes(mla, "int8") == n_attn * (feats + 2 * 4)
+
+    # hybrid: recurrent kinds hold no KV and count 0 bytes
+    _, hyb = _setup("recurrentgemma-2b")
+    n_attn = sum(k == "attn" for k in hyb.pattern_for())
+    assert n_attn < len(hyb.pattern_for())
+    assert kv_token_bytes(hyb, "fp32") == n_attn * 2 * hyb.num_kv_heads * \
+        hyb.resolved_head_dim() * 4
+
+
+def test_block_pool_byte_accounting():
+    pool = BlockPool(pool_blocks=8, page_size=4, slots=2,
+                     max_blocks_per_seq=4, token_bytes=160)
+    assert pool.reserved_bytes == 8 * 4 * 160
+    assert pool.used_bytes == 0
+    assert pool.alloc(0, 5)   # 2 blocks
+    assert pool.used_bytes == 2 * 4 * 160
+    pool.free_slot(0)
+    assert pool.used_bytes == 0
+
+
+def test_engine_quant_memory_stats_bytes():
+    params, cfg = _setup("qwen2-0.5b")
+    eng = ServeEngine(params, cfg, slots=2, max_len=32, chunk_size=8,
+                      kv_layout="paged", page_size=8, kv_dtype="int8")
+    eng.submit([1, 2, 3, 4, 5, 6, 7, 8, 9], 4)
+    eng.run()
+    st = eng.memory_stats()
+    assert st["kv_dtype"] == "int8"
+    assert st["kv_token_bytes"] == kv_token_bytes(cfg, "int8")
+    assert st["kv_reserved_bytes"] == \
+        st["kv_reserved_tokens"] * st["kv_token_bytes"]
+    assert st["kv_peak_used_bytes"] == \
+        st["kv_peak_used_tokens"] * st["kv_token_bytes"]
+    assert st["kv_bytes_per_active_token"] > 0
+    # the engine's pool carries the same unit for host-side accounting
+    assert eng.pool.token_bytes == st["kv_token_bytes"]
