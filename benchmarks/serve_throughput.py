@@ -75,13 +75,15 @@ def mixed_prompts(rng, vocab, slots, prompt_len):
 
 
 def bench_run(params, cfg0, variant, kv_layout, kv_dtype, *, slots,
-              prompt_len, max_new, chunk, max_len, page_size, pool_frac):
+              prompt_len, max_new, chunk, max_len, page_size, pool_frac,
+              attention_impl=None):
     cfg = cfg0.replace(attention_variant=variant)
     rng = np.random.default_rng(0)
     prompts = mixed_prompts(rng, cfg.vocab_size, slots, prompt_len)
 
     kw = {"slots": slots, "max_len": max_len, "chunk_size": chunk,
-          "kv_layout": kv_layout, "kv_dtype": kv_dtype}
+          "kv_layout": kv_layout, "kv_dtype": kv_dtype,
+          "attention_impl": attention_impl}
     if kv_layout == "paged":
         full = slots * blocks_for(max_len, page_size)
         kw.update(page_size=page_size,
@@ -109,6 +111,7 @@ def bench_run(params, cfg0, variant, kv_layout, kv_dtype, *, slots,
     assert all(r.done for r in reqs)
     r = {
         "variant": variant,
+        "attention_impl": eng.attention_impl,
         "prompt_lens": [len(p) for p in prompts],
         "prefill_tokens": int(prefill_tokens),
         "prefill_steps": int(eng.prefill_steps),
@@ -171,6 +174,7 @@ def main(argv=None):
     print(f"# serve_throughput {args.arch} slots={args.slots} "
           f"prompt<={args.prompt_len} chunk={args.chunk} "
           f"page={args.page_size} kv_dtypes={','.join(kv_dtypes)}")
+    all_streams = {}  # (variant, kv_dtype, kv_layout) -> token streams
     for variant in ("exact", "expmul"):
         fp32_streams = {}
         for kv_dtype in kv_dtypes:
@@ -183,6 +187,7 @@ def main(argv=None):
                     max_len=args.max_len, page_size=args.page_size,
                     pool_frac=args.pool_frac)
                 streams[kv_layout] = outs
+                all_streams[(variant, kv_dtype, kv_layout)] = outs
                 if kv_dtype == "fp32":
                     fp32_streams[kv_layout] = outs
                     r["exact_match_vs_fp32"] = 1.0
@@ -209,10 +214,35 @@ def main(argv=None):
             assert streams["contiguous"] == streams["paged"], \
                 f"paged streams diverged from contiguous ({variant}/{kv_dtype})"
 
+    # fused-vs-gather pair (DESIGN.md §9): rerun the exact paged cell with
+    # the Pallas fused decode (in-kernel block tables + in-register dequant)
+    # and assert its temp-0 streams are identical to the gather backend's —
+    # the attention_impl column distinguishes the rows in BENCH_serve.json.
+    fused_dtype = "int8" if "int8" in kv_dtypes else "fp32"
+    r, outs = bench_run(
+        params, cfg, "exact", "paged", fused_dtype,
+        slots=args.slots, prompt_len=args.prompt_len, max_new=args.max_new,
+        chunk=args.chunk, max_len=args.max_len, page_size=args.page_size,
+        pool_frac=args.pool_frac, attention_impl="pallas")
+    assert outs == all_streams[("exact", fused_dtype, "paged")], (
+        f"fused (pallas) exact/{fused_dtype}/paged temp-0 streams diverged "
+        f"from the gather backend")
+    r["exact_match_vs_fp32"] = stream_match_rate(
+        all_streams[("exact", "fp32", "paged")], outs)
+    results["runs"].append(r)
+    print(f"  exact  /{fused_dtype:5s}/paged[pallas]: prefill "
+          f"{r['prefill_tok_per_s']:9.1f} tok/s, decode "
+          f"{r['decode_tok_per_s']:7.1f} tok/s, streams == gather backend "
+          f"(fused decode; CPU runs the kernel in interpret mode)")
+
     def pick(variant, kv_dtype, kv_layout):
+        # the fused (pallas) rerun shares this triple with its gather row:
+        # the summary comparisons are about KV layout/dtype, so they pin
+        # the default-impl row explicitly rather than relying on list order
         return next(r for r in results["runs"]
-                    if (r["variant"], r["kv_dtype"], r["kv_layout"])
-                    == (variant, kv_dtype, kv_layout))
+                    if (r["variant"], r["kv_dtype"], r["kv_layout"],
+                        r["attention_impl"])
+                    == (variant, kv_dtype, kv_layout, cfg.attention_impl))
 
     # headline 1: paged resident KV per active token vs contiguous (fp32)
     cont = pick("exact", "fp32", "contiguous")

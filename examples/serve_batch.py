@@ -2,8 +2,11 @@
 slot pool, comparing the exact and ExpMul attention variants on identical
 requests — and, with ``--kv-dtype int8|fp8``, the quantized KV cache
 against the fp32 baseline (temp-0 exact-match rate, DESIGN.md §8).
+``--attention-impl pallas`` serves decode on the fused Pallas kernels
+(DESIGN.md §9; interpret mode on CPU).
 
-  PYTHONPATH=src python examples/serve_batch.py [--kv-dtype int8]
+  PYTHONPATH=src python examples/serve_batch.py [--kv-dtype int8] \
+      [--attention-impl pallas]
 """
 import argparse
 import time
@@ -21,10 +24,10 @@ from repro.serve.engine import (
 
 
 def run(variant, params, cfg0, prompts, *, kv_dtype="fp32", max_new=24,
-        chunk=16):
+        chunk=16, attention_impl=None):
     cfg = cfg0.replace(attention_variant=variant)
     eng = ServeEngine(params, cfg, slots=4, max_len=128, chunk_size=chunk,
-                      kv_dtype=kv_dtype)
+                      kv_dtype=kv_dtype, attention_impl=attention_impl)
     reqs = [eng.submit(p, max_new, rid=i) for i, p in enumerate(prompts)]
     t0 = time.time()
     eng.run()
@@ -38,6 +41,10 @@ def main():
                     choices=["fp32", "int8", "fp8"],
                     help="KV-cache storage dtype (int8/fp8 also print the "
                          "exact-match rate vs the fp32 cache)")
+    ap.add_argument("--attention-impl", default=None,
+                    choices=["ref", "flash_jnp", "pallas"],
+                    help="attention backend family ('pallas': fused decode "
+                         "kernels, DESIGN.md §9)")
     args = ap.parse_args()
 
     cfg = get_config("qwen2-0.5b", smoke=True, dtype="float32",
@@ -55,7 +62,8 @@ def main():
           f"batching, greedy decode, kv_dtype={args.kv_dtype}")
     for variant in ("exact", "expmul"):
         reqs, tps, eng = run(variant, params, cfg, prompts,
-                             kv_dtype=args.kv_dtype)
+                             kv_dtype=args.kv_dtype,
+                             attention_impl=args.attention_impl)
         line = (f"  {variant:7s}: {eng.ticks} steps (prefill "
                 f"{eng.prefill_steps} / decode {eng.decode_steps}), "
                 f"{tps:7.1f} tok/s")

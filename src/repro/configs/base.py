@@ -75,7 +75,9 @@ class ModelConfig:
     attention_q_chunks: int = 4            # causal block skipping (1 = off)
     attention_decode_impl: str | None = None   # None: derived from impl
     attention_prefill_impl: str | None = None  # None: masked_xla
-    attention_paged_impl: str | None = None    # None: gather_xla
+    # None: follows impl — "pallas" selects the fused paged decode kernel
+    # (in-kernel block tables, DESIGN.md §9), otherwise gather_xla
+    attention_paged_impl: str | None = None
 
     # paged KV-cache serving defaults (DESIGN §7; engine args override)
     page_size: int = 16            # tokens per KV block

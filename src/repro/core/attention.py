@@ -33,6 +33,7 @@ import numpy as np
 from repro.kernels.flash.ops import flash_attention_fwd
 from repro.kernels.decode.ops import (
     decode_attention_pallas,
+    fused_paged_decode_attention_pallas,
     paged_decode_attention_pallas,
 )
 from repro.kernels.paged import gather_rows
@@ -397,7 +398,8 @@ def _gather_kv(pool, rows):
 
 @register_paged_prefill("gather_xla")
 def _paged_prefill_gather_xla(q, k_chunk, v_chunk, k_pool, v_pool, rows, *,
-                              spec, scale, q_positions, chunk_valid, lengths):
+                              spec, scale, q_positions, chunk_valid, lengths,
+                              block_tables=None, page_size=0):
     """Gather the paged history, concat the fresh chunk, and run the exact
     positional-masking prefill math as the contiguous ``masked_xla`` path.
 
@@ -417,24 +419,44 @@ def _paged_prefill_gather_xla(q, k_chunk, v_chunk, k_pool, v_pool, rows, *,
         variant=spec.variant, use_ste=spec.use_ste)
 
 
-@register_paged_prefill("gather_pallas")
+@register_paged_prefill("gather_pallas", fallback_of="gather_xla")
+@register_paged_prefill("pallas", fallback_of="gather_xla")
 def _paged_prefill_gather_pallas(q, k_chunk, v_chunk, k_pool, v_pool, rows,
                                  *, spec, scale, q_positions, chunk_valid,
-                                 lengths):
-    # No Pallas prefill kernel yet (positional masks): the "gather_pallas"
-    # family uses the Pallas kernel for decode and falls back to the masked
-    # XLA path for prefill, so one paged_impl knob selects a working pair.
+                                 lengths, block_tables=None, page_size=0):
+    # No Pallas prefill kernel yet (positional masks): the "pallas" and
+    # "gather_pallas" families use Pallas kernels for decode and fall back
+    # to the masked XLA gather math for prefill, so one paged_impl knob
+    # selects a working pair. The fallback is declared above and reported
+    # by resolved_backends() — never silent (DESIGN.md §9).
     return _paged_prefill_gather_xla(
         q, k_chunk, v_chunk, k_pool, v_pool, rows, spec=spec, scale=scale,
         q_positions=q_positions, chunk_valid=chunk_valid, lengths=lengths)
 
 
+@register_paged_decode("pallas")
+def _paged_decode_pallas(q, k_pool, v_pool, rows, lengths, *, spec, scale,
+                         block_tables=None, page_size=0):
+    """Fused paged flash-decode (DESIGN.md §9): block-table indexing happens
+    inside the kernel's index maps, so the history is read straight out of
+    the pool — no materialized gather copy. Windows mask in-kernel. Callers
+    that dispatch without the table operands (``rows`` only) get the
+    gather-then-kernel form."""
+    if block_tables is None:
+        return _paged_decode_gather_pallas(q, k_pool, v_pool, rows, lengths,
+                                           spec=spec, scale=scale)
+    return fused_paged_decode_attention_pallas(
+        q, k_pool, v_pool, block_tables, lengths, page_size=page_size,
+        scale=scale, variant=spec.variant, window=spec.window)
+
+
 @register_paged_decode("gather_pallas")
 def _paged_decode_gather_pallas(q, k_pool, v_pool, rows, lengths, *, spec,
-                                scale):
+                                scale, block_tables=None, page_size=0):
     if spec.window is not None:
-        # the flash-decode kernel masks only by length; windows need the
-        # positional path
+        # the contiguous flash-decode kernel masks only by length; windows
+        # need the positional path (the fused "pallas" backend masks them
+        # in-kernel)
         return _paged_decode_gather_xla(q, k_pool, v_pool, rows, lengths,
                                         spec=spec, scale=scale)
     return paged_decode_attention_pallas(
@@ -444,7 +466,7 @@ def _paged_decode_gather_pallas(q, k_pool, v_pool, rows, lengths, *, spec,
 
 @register_paged_decode("gather_xla")
 def _paged_decode_gather_xla(q, k_pool, v_pool, rows, lengths, *, spec,
-                             scale):
+                             scale, block_tables=None, page_size=0):
     """Gather the paged history (current token included) and decode.
 
     Unlike the contiguous rolling-buffer decode, windowed layers here keep

@@ -1,14 +1,41 @@
-"""Pallas TPU kernel: flash-decode (one query token against a long KV cache).
+"""Pallas TPU kernels: flash-decode (one query token against a long KV
+cache) for contiguous, quantized, and paged (block-table) cache layouts.
 
 Grid = (B * Hkv, kv_blocks). Each program owns the ``group`` query heads that
 share one KV head (GQA), so the row axis of every tile is the head-group —
 MQA (kv=1) degenerates to all H heads in one tile, which is exactly the
-layout that keeps the MXU busy for single-token decode. Per-sequence cache
-lengths arrive as a (B, 128) int32 operand read inside the kernel.
+layout that keeps the MXU busy for single-token decode.
 
-The ExpMul variant applies the paper's operator to the decode path, where the
-softmax/rescale work is the dominant VPU cost (there is no large matmul to
-hide it behind) — the most favourable case for the technique on TPU.
+Three kernels share one online-softmax tile step (``_online_softmax_step``):
+
+* **contiguous** — per-slot ``(B, Hkv, S, ·)`` caches; per-sequence lengths
+  arrive as a (B, 128) int32 operand read inside the kernel.
+* **quantized contiguous** — the cache-side operands are int8/fp8 *codes*
+  plus per-row float32 scales (``numerics/quant.py`` codec). Dequant is
+  fused in-register: the score matmul runs on raw codes and takes one
+  column rescale (``(q @ codes^T) * k_scale``), the value matmul folds the
+  scale into the probability tile (``(p * v_scale) @ codes``) — the
+  full-precision K/V never exists outside VMEM registers.
+* **paged** — the KV history lives in a flat physical token pool viewed as
+  ``(pool_blocks, page_size, Hkv, ·)``; per-sequence block tables are a
+  scalar-prefetch operand and the *index maps* resolve each grid step's
+  physical block (``block_table[b, kv_block]``) before the DMA is issued —
+  the standard TPU PagedAttention formulation. No gathered copy of the
+  history is ever materialized in HBM. Sentinel entries (= pool_blocks,
+  unallocated) are clamped into range by the index map; they only cover
+  positions at/after ``length`` so the length mask hides them. Local
+  windows mask positions below ``length - window`` in-kernel (paged caches
+  keep absolute positions; DESIGN.md §7), and whole pages outside
+  [length - window, length) are skipped.
+
+The ExpMul variant applies the paper's operator to the decode path, where
+the softmax/rescale work is the dominant VPU cost (there is no large matmul
+to hide it behind) — the most favourable case for the technique on TPU. Its
+pow2 softmax weights multiply the still-quantized value tiles, so the fused
+operator composes with KV quantization exactly as in the paper.
+
+On CPU the kernels run in Pallas interpret mode (the wrappers in ``ops.py``
+flip the flag automatically) — same math, no TPU lowering (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -23,6 +50,7 @@ try:
 
     _VMEM = pltpu.VMEM
 except Exception:  # pragma: no cover
+    pltpu = None
     _VMEM = None
 
 from repro.numerics.log2exp import apply_pow2_scale, log2exp_lhat, pow2_neg
@@ -31,21 +59,68 @@ MASK_VALUE = -1e30
 _LANES = 128
 
 
-def _decode_kernel(
-    len_ref,   # (1, 128) int32; [0, 0] is the cache length for this batch elt
-    q_ref,     # (1, group, D)
-    k_ref,     # (1, bk, D)
-    v_ref,     # (1, bk, D)
-    o_ref,     # (1, group, D)
-    m_scr,
-    l_scr,
-    acc_scr,
-    *,
-    scale,
-    variant,
-    block_k,
-    nk,
-):
+def _online_softmax_step(q, k, v, k_scale, v_scale, mask,
+                         m_scr, l_scr, acc_scr, *, scale, variant):
+    """One KV tile of the online-softmax recurrence (shared by all kernels).
+
+    q: (group, D) f32; k: (bk, D) f32 values — or raw codes when ``k_scale``
+    is given; v: (bk, Dv) values or codes; k_scale/v_scale: (bk,) f32
+    per-row scales or None; mask: (group, bk) bool of valid columns.
+
+    Quantized fusion: scores take one column rescale after the q·codes
+    matmul, and the value matmul folds the scale into the probability tile
+    — for the ExpMul variant the pow2 weights therefore multiply the
+    still-quantized value codes. The denominator uses the dequantized
+    scores (k_scale is already inside ``s``), never v_scale.
+    """
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale
+    if k_scale is not None:
+        s = s * k_scale[None, :]
+    s = jnp.where(mask, s, MASK_VALUE)
+    m_prev = m_scr[...][:, :1]
+    l_prev = l_scr[...][:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    if variant == "exact":
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        pv = p if v_scale is None else p * v_scale[None, :]
+        acc = acc_scr[...] * alpha + jax.lax.dot_general(
+            pv, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+    else:
+        lr = log2exp_lhat(m_prev - m_new)
+        p = jnp.where(mask, pow2_neg(log2exp_lhat(s - m_new), jnp.float32), 0.0)
+        l_new = apply_pow2_scale(l_prev, lr) + jnp.sum(p, axis=1, keepdims=True)
+        pv = p if v_scale is None else p * v_scale[None, :]
+        acc = apply_pow2_scale(
+            acc_scr[...], jnp.broadcast_to(lr, acc_scr.shape)
+        ) + jax.lax.dot_general(
+            pv, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+    acc_scr[...] = acc
+
+
+def _finalize(o_ref, l_scr, acc_scr):
+    l = l_scr[...][:, :1]
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Contiguous caches (fp32/bf16 values, or quantized codes + scale rows)
+# ---------------------------------------------------------------------------
+def _decode_kernel(*refs, scale, variant, block_k, nk, quant):
+    if quant:
+        (len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+         o_ref, m_scr, l_scr, acc_scr) = refs
+    else:
+        len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
+        ks_ref = vs_ref = None
     ki = pl.program_id(1)
     length = len_ref[0, 0]
 
@@ -59,54 +134,33 @@ def _decode_kernel(
 
     @pl.when(c0 < length)
     def _body():
-        q = q_ref[0].astype(jnp.float32)        # (group, d)
-        k = k_ref[0].astype(jnp.float32)        # (bk, d)
-        v = v_ref[0].astype(jnp.float32)
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        ) * scale                                # (group, bk)
-        cols = c0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        mask = cols < length
-        s = jnp.where(mask, s, MASK_VALUE)
-        m_prev = m_scr[...][:, :1]
-        l_prev = l_scr[...][:, :1]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        if variant == "exact":
-            alpha = jnp.exp(m_prev - m_new)
-            p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
-            l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
-            acc = acc_scr[...] * alpha + jax.lax.dot_general(
-                p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-            )
-        else:
-            lr = log2exp_lhat(m_prev - m_new)
-            p = jnp.where(mask, pow2_neg(log2exp_lhat(s - m_new), jnp.float32), 0.0)
-            l_new = apply_pow2_scale(l_prev, lr) + jnp.sum(p, axis=1, keepdims=True)
-            acc = apply_pow2_scale(
-                acc_scr[...], jnp.broadcast_to(lr, acc_scr.shape)
-            ) + jax.lax.dot_general(
-                p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-            )
-        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
-        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
-        acc_scr[...] = acc
+        q = q_ref[0].astype(jnp.float32)
+        cols = c0 + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], block_k), 1)
+        _online_softmax_step(
+            q, k_ref[0].astype(jnp.float32), v_ref[0].astype(jnp.float32),
+            ks_ref[0] if quant else None,
+            vs_ref[0] if quant else None,
+            cols < length, m_scr, l_scr, acc_scr,
+            scale=scale, variant=variant)
 
     @pl.when(ki == nk - 1)
     def _fin():
-        l = l_scr[...][:, :1]
-        l = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        _finalize(o_ref, l_scr, acc_scr)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("scale", "variant", "block_k", "num_q_heads", "num_kv_heads", "interpret"),
+    static_argnames=("scale", "variant", "block_k", "num_q_heads",
+                     "num_kv_heads", "interpret"),
 )
 def decode_fwd_pallas(
-    q3,        # (B*Hkv, group, D)
-    k3,        # (B*Hkv, Sk_padded, D)
-    v3,
-    len2,      # (B, 128) int32
+    q3,         # (B*Hkv, group, D)
+    k3,         # (B*Hkv, Sk_padded, D)   values or codes
+    v3,         # (B*Hkv, Sk_padded, Dv)  values or codes
+    len2,       # (B, 128) int32
+    ks2=None,   # (B*Hkv, Sk_padded) f32 per-row K scales (quantized caches)
+    vs2=None,   # (B*Hkv, Sk_padded) f32 per-row V scales
     *,
     scale,
     variant,
@@ -117,25 +171,170 @@ def decode_fwd_pallas(
 ):
     BHkv, group, D = q3.shape
     Sk = k3.shape[1]
+    Dv = v3.shape[2]
     nk = Sk // block_k
+    quant = ks2 is not None
     kernel = functools.partial(
-        _decode_kernel, scale=scale, variant=variant, block_k=block_k, nk=nk
+        _decode_kernel, scale=scale, variant=variant, block_k=block_k, nk=nk,
+        quant=quant,
     )
+    in_specs = [
+        pl.BlockSpec((1, _LANES), lambda bh, ki: (bh // num_kv_heads, 0)),
+        pl.BlockSpec((1, group, D), lambda bh, ki: (bh, 0, 0)),
+        pl.BlockSpec((1, block_k, D), lambda bh, ki: (bh, ki, 0)),
+        pl.BlockSpec((1, block_k, Dv), lambda bh, ki: (bh, ki, 0)),
+    ]
+    args = [len2, q3, k3, v3]
+    if quant:
+        in_specs += [
+            pl.BlockSpec((1, block_k), lambda bh, ki: (bh, ki)),
+            pl.BlockSpec((1, block_k), lambda bh, ki: (bh, ki)),
+        ]
+        args += [ks2, vs2]
     return pl.pallas_call(
         kernel,
         grid=(BHkv, nk),
-        in_specs=[
-            pl.BlockSpec((1, _LANES), lambda bh, ki: (bh // num_kv_heads, 0)),
-            pl.BlockSpec((1, group, D), lambda bh, ki: (bh, 0, 0)),
-            pl.BlockSpec((1, block_k, D), lambda bh, ki: (bh, ki, 0)),
-            pl.BlockSpec((1, block_k, D), lambda bh, ki: (bh, ki, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, group, D), lambda bh, ki: (bh, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((BHkv, group, D), q3.dtype),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, group, Dv), lambda bh, ki: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BHkv, group, Dv), q3.dtype),
         scratch_shapes=[
             _VMEM((group, _LANES), jnp.float32),
             _VMEM((group, _LANES), jnp.float32),
-            _VMEM((group, D), jnp.float32),
+            _VMEM((group, Dv), jnp.float32),
         ],
         interpret=interpret,
-    )(len2, q3, k3, v3)
+    )(*args)
+
+
+# ---------------------------------------------------------------------------
+# Paged caches: in-kernel block-table indexing (scalar-prefetch index maps)
+# ---------------------------------------------------------------------------
+def _paged_decode_kernel(*refs, scale, variant, page_size, nk, quant, window,
+                         num_kv_heads):
+    if quant:
+        (bt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+         o_ref, m_scr, l_scr, acc_scr) = refs
+    else:
+        (bt_ref, len_ref, q_ref, k_ref, v_ref,
+         o_ref, m_scr, l_scr, acc_scr) = refs
+        ks_ref = vs_ref = None
+    del bt_ref  # consumed by the index maps; the body never reads it
+    bh = pl.program_id(0)
+    ki = pl.program_id(1)
+    length = len_ref[bh // num_kv_heads]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, MASK_VALUE)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    c0 = ki * page_size
+    run = c0 < length
+    if window is not None:
+        # pages entirely below the window floor contribute nothing
+        run = jnp.logical_and(run, c0 + page_size > length - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)
+        cols = c0 + jax.lax.broadcasted_iota(
+            jnp.int32, (q.shape[0], page_size), 1)
+        mask = cols < length
+        if window is not None:
+            mask = jnp.logical_and(mask, cols >= length - window)
+        _online_softmax_step(
+            q, k_ref[0, :, 0].astype(jnp.float32),
+            v_ref[0, :, 0].astype(jnp.float32),
+            ks_ref[0, :, 0] if quant else None,
+            vs_ref[0, :, 0] if quant else None,
+            mask, m_scr, l_scr, acc_scr, scale=scale, variant=variant)
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        _finalize(o_ref, l_scr, acc_scr)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "variant", "page_size", "window",
+                     "num_kv_heads", "interpret"),
+)
+def paged_decode_fwd_pallas(
+    bt,         # (B, max_blocks) int32 block tables (scalar prefetch)
+    len1,       # (B,) int32 valid entries incl. the current token
+    q3,         # (B*Hkv, group, D)
+    k4,         # (pool_blocks, page_size, Hkv, D)   values or codes
+    v4,         # (pool_blocks, page_size, Hkv, Dv)  values or codes
+    ks3=None,   # (pool_blocks, page_size, Hkv) f32 K scale pool (quantized)
+    vs3=None,   # (pool_blocks, page_size, Hkv) f32 V scale pool
+    *,
+    scale,
+    variant,
+    page_size,
+    window,
+    num_kv_heads,
+    interpret,
+):
+    if pltpu is None:  # pragma: no cover
+        raise NotImplementedError(
+            "fused paged decode needs jax.experimental.pallas.tpu "
+            "(PrefetchScalarGridSpec); use the gather_xla paged path")
+    BHkv, group, D = q3.shape
+    nblk = k4.shape[0]
+    Dv = v4.shape[-1]
+    _, MB = bt.shape
+    quant = ks3 is not None
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, variant=variant,
+        page_size=page_size, nk=MB, quant=quant, window=window,
+        num_kv_heads=num_kv_heads,
+    )
+
+    # The block table is resolved here, per grid step, before the tile DMA:
+    # sentinel entries (= pool_blocks, unallocated) are clamped into range —
+    # they only ever cover positions >= length, which the kernel masks.
+    def _blk(bh, ki, bt_ref):
+        return jnp.minimum(bt_ref[bh // num_kv_heads, ki], nblk - 1)
+
+    in_specs = [
+        pl.BlockSpec((1, group, D), lambda bh, ki, bt, ln: (bh, 0, 0)),
+        pl.BlockSpec(
+            (1, page_size, 1, D),
+            lambda bh, ki, bt, ln: (_blk(bh, ki, bt), 0,
+                                    bh % num_kv_heads, 0)),
+        pl.BlockSpec(
+            (1, page_size, 1, Dv),
+            lambda bh, ki, bt, ln: (_blk(bh, ki, bt), 0,
+                                    bh % num_kv_heads, 0)),
+    ]
+    args = [bt, len1.astype(jnp.int32), q3, k4, v4]
+    if quant:
+        in_specs += [
+            pl.BlockSpec(
+                (1, page_size, 1),
+                lambda bh, ki, bt, ln: (_blk(bh, ki, bt), 0,
+                                        bh % num_kv_heads)),
+            pl.BlockSpec(
+                (1, page_size, 1),
+                lambda bh, ki, bt, ln: (_blk(bh, ki, bt), 0,
+                                        bh % num_kv_heads)),
+        ]
+        args += [ks3, vs3]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(BHkv, MB),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, group, Dv), lambda bh, ki, bt, ln: (bh, 0, 0)),
+        scratch_shapes=[
+            _VMEM((group, _LANES), jnp.float32),
+            _VMEM((group, _LANES), jnp.float32),
+            _VMEM((group, Dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BHkv, group, Dv), q3.dtype),
+        interpret=interpret,
+    )(*args)

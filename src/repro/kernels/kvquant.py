@@ -21,9 +21,24 @@ is the paged form (codes pool + parallel scale pool, DESIGN.md §7/§8).
 Recurrent block kinds have no KV cache and bypass quantization entirely,
 exactly as they bypass paging.
 
-No quantized Pallas kernels yet: the ``pallas*_q`` names fall back to the
-fused-dequant XLA paths so one config knob stays valid across backends
-(mirroring the ``gather_pallas`` prefill fallback in core.attention).
+The ``pallas*_q`` decode names are real fused kernels (DESIGN.md §9), not
+XLA aliases:
+
+  * ``pallas_q`` decode loads int8/fp8 codes + f32 scale rows straight
+    from the contiguous cache and dequantizes in-register inside the
+    flash-decode kernel — score matmul on raw codes with one column
+    rescale, value matmul with the (ExpMul pow2 or exact softmax) weights
+    applied to the still-quantized value tiles;
+  * the ``pallas_q`` *paged* decode additionally resolves the block table
+    inside the kernel's index maps, so a decode tick reads only codes,
+    scales, and the table — the materialized fp32 KV copy of the
+    ``gather_*`` paths never exists (benchmarks/decode_microbench.py
+    tracks the bytes/token gap).
+
+Only the *prefill* names remain declared fallbacks onto the fused-dequant
+XLA gather math (no Pallas prefill kernel) — reported by
+``registry.resolved_backends``, never silent. On CPU the kernels run in
+Pallas interpret mode.
 """
 from __future__ import annotations
 
@@ -32,6 +47,10 @@ import jax.numpy as jnp
 from repro.core.attention import (
     _masked_decode_xla,
     prefill_attention,
+)
+from repro.kernels.decode.ops import (
+    quant_decode_attention_pallas,
+    quant_fused_paged_decode_attention_pallas,
 )
 from repro.kernels.paged import gather_rows, scatter_rows
 from repro.kernels.registry import (
@@ -128,8 +147,16 @@ def _decode_q(q, k_cache, v_cache, lengths, *, spec, scale):
 
 
 register_decode("xla_q")(_decode_q)
-# no quantized Pallas decode kernel yet: same fused-dequant XLA math
-register_decode("pallas_q")(_decode_q)
+
+
+@register_decode("pallas_q")
+def _decode_pallas_q(q, k_cache, v_cache, lengths, *, spec, scale):
+    """Quantized flash-decode: codes + scale rows go into the kernel as-is,
+    dequant is fused in-register into both matmuls (DESIGN.md §9)."""
+    return quant_decode_attention_pallas(
+        q, k_cache.codes, v_cache.codes, k_cache.scale, v_cache.scale,
+        lengths, scale=scale, variant=spec.variant,
+        block_k=spec.decode_block_k)
 
 
 # ---------------------------------------------------------------------------
@@ -142,7 +169,8 @@ def _gather_dequant_kv(pool, rows, spec):
 
 
 def _paged_prefill_q(q, k_chunk, v_chunk, k_pool, v_pool, rows, *, spec,
-                     scale, q_positions, chunk_valid, lengths):
+                     scale, q_positions, chunk_valid, lengths,
+                     block_tables=None, page_size=0):
     """Quantized twin of core.attention's ``gather_xla`` paged prefill:
     the history is gathered+dequantized through ``rows``, the (already
     quantized) chunk is dequantized in place, and the positional-masking
@@ -165,7 +193,8 @@ def _paged_prefill_q(q, k_chunk, v_chunk, k_pool, v_pool, rows, *, spec,
         variant=spec.variant, use_ste=spec.use_ste)
 
 
-def _paged_decode_q(q, k_pool, v_pool, rows, lengths, *, spec, scale):
+def _paged_decode_q(q, k_pool, v_pool, rows, lengths, *, spec, scale,
+                    block_tables=None, page_size=0):
     L = rows.shape[1]
     pos = jnp.arange(L)[None, :]
     mask = pos < lengths[:, None]
@@ -176,7 +205,29 @@ def _paged_decode_q(q, k_pool, v_pool, rows, lengths, *, spec, scale):
                               variant=spec.variant, scale=scale)
 
 
+@register_paged_decode("pallas_q")
+def _paged_decode_pallas_q(q, k_pool, v_pool, rows, lengths, *, spec, scale,
+                           block_tables=None, page_size=0):
+    """The fully fused serving kernel: paged + quantized. Reads only the
+    code pools, scale pools, and block tables — in-kernel block-table
+    indexing composed with in-register dequant (DESIGN.md §9). Dispatches
+    without table operands fall back to the gather+dequant math."""
+    if block_tables is None:
+        return _paged_decode_q(q, k_pool, v_pool, rows, lengths, spec=spec,
+                               scale=scale)
+    return quant_fused_paged_decode_attention_pallas(
+        q, k_pool.codes, v_pool.codes, k_pool.scale, v_pool.scale,
+        block_tables, lengths, page_size=page_size, scale=scale,
+        variant=spec.variant, window=spec.window)
+
+
 register_paged_prefill("gather_xla_q")(_paged_prefill_q)
-register_paged_prefill("gather_pallas_q")(_paged_prefill_q)
+# no Pallas prefill kernel: declared fallbacks onto the fused-dequant XLA
+# gather math, reported by registry.resolved_backends (DESIGN.md §9)
+register_paged_prefill("gather_pallas_q", fallback_of="gather_xla_q")(
+    _paged_prefill_q)
+register_paged_prefill("pallas_q", fallback_of="gather_xla_q")(
+    _paged_prefill_q)
 register_paged_decode("gather_xla_q")(_paged_decode_q)
-register_paged_decode("gather_pallas_q")(_paged_decode_q)
+register_paged_decode("gather_pallas_q", fallback_of="gather_xla_q")(
+    _paged_decode_q)

@@ -22,6 +22,12 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+# Row index assigned to positions that fall outside the block table entirely
+# (negative, or at/after max_blocks * page_size). Any pool is far smaller, so
+# gathers fill zeros and scatters drop — same fate as sentinel-block rows.
+# Kept well under int32 max so downstream arithmetic cannot wrap around.
+OUT_OF_TABLE_ROW = jnp.int32(2**30)
+
 
 def slot_rows(block_table, page_size: int):
     """Physical rows covering every logical position of each sequence.
@@ -42,15 +48,26 @@ def slot_rows(block_table, page_size: int):
 def token_rows(block_table, positions, page_size: int):
     """Physical rows for specific logical positions (the write targets).
 
-    positions: (B,) or (B, C) absolute token positions. Block lookups are
-    clamped into the table (XLA gather semantics); callers gate positions
-    beyond the allocated region with a validity mask on the scatter instead.
-    Returns rows shaped like ``positions``.
+    positions: (B,) or (B, C) absolute token positions. Positions outside
+    the table span — negative, or at/after ``max_blocks * page_size`` — are
+    gated to ``OUT_OF_TABLE_ROW``, an index no pool can contain, so their
+    gathers read the fill value and their scatters drop exactly. (The
+    previous clamp-into-table behavior made a negative position alias
+    *block 0's row 0* — a physical row that may belong to another sequence
+    — relying on every caller's validity mask to save the pool; the gate
+    makes the primitive itself safe. Regression: tests/test_paged.py
+    ``test_token_rows_out_of_table_positions_hit_no_valid_row``.)
+    Sentinel-block entries *inside* the table still map past the pool end
+    (`phys = pool_blocks`) exactly as before. Returns rows shaped like
+    ``positions``.
     """
     pos = positions if positions.ndim == 2 else positions[:, None]
-    blk = jnp.clip(pos // page_size, 0, block_table.shape[1] - 1)
-    phys = jnp.take_along_axis(block_table, blk, axis=1)
+    blk = pos // page_size
+    in_table = (pos >= 0) & (blk < block_table.shape[1])
+    phys = jnp.take_along_axis(
+        block_table, jnp.clip(blk, 0, block_table.shape[1] - 1), axis=1)
     rows = phys.astype(jnp.int32) * page_size + (pos % page_size).astype(jnp.int32)
+    rows = jnp.where(in_table, rows, OUT_OF_TABLE_ROW)
     return rows if positions.ndim == 2 else rows[:, 0]
 
 

@@ -27,11 +27,25 @@ The paged conventions (DESIGN.md §7) take KV as a flat physical token pool
 indices in logical position order, derived from the block table by
 ``repro.kernels.paged.slot_rows`` — instead of per-slot contiguous caches.
 Position ``j`` of sequence ``b`` lives at ``rows[b, j]``; masking stays
-purely positional (``j < lengths[b]``, window by ``lengths - j``).
+purely positional (``j < lengths[b]``, window by ``lengths - j``). Both
+paged dispatchers additionally forward the raw ``block_tables (B,
+max_blocks)`` and ``page_size`` when the caller has them: fused kernels
+(the ``pallas`` paged decode, DESIGN.md §9) resolve pool rows *inside* the
+kernel from the table and never touch ``rows``; gather-style backends
+ignore them.
 
 Built-in implementations live in ``repro.core.attention`` and register
 themselves on import; new backends (e.g. a Pallas prefill kernel) register
 under a new name and become selectable purely through the model config.
+
+A registration may declare itself a **fallback** (``register_*(name,
+fallback_of="other")``) when the name routes to another implementation's
+math rather than a dedicated kernel — e.g. there is no Pallas *prefill*
+kernel, so the ``pallas`` paged-prefill entry reuses the masked-XLA gather
+math. ``resolved_backends(spec)`` reports, per dispatch table, what a spec
+actually runs (including such fallbacks and the CPU interpret-mode caveat
+for Pallas kernels); ``ServeEngine`` logs the non-obvious rows once at
+startup so a requested impl can never silently mean something else.
 
 ``AttentionSpec.kv_dtype`` adds a quantized-KV axis to every table
 (DESIGN.md §8): when it is "int8" or "fp8" the resolvers return the
@@ -94,7 +108,11 @@ class AttentionSpec:
         return self._q(self.prefill_impl or "masked_xla")
 
     def resolved_paged_impl(self) -> str:
-        return self._q(self.paged_impl or "gather_xla")
+        if self.paged_impl is not None:
+            return self._q(self.paged_impl)
+        # like decode: one ``impl="pallas"`` knob selects the whole family
+        # (fused paged decode kernel + its documented prefill fallback)
+        return self._q("pallas" if self.impl == "pallas" else "gather_xla")
 
     @classmethod
     def from_config(cls, cfg, *, window=None, variant=None,
@@ -131,40 +149,71 @@ _DECODE_IMPLS: dict[str, object] = {}
 _PAGED_PREFILL_IMPLS: dict[str, object] = {}
 _PAGED_DECODE_IMPLS: dict[str, object] = {}
 
-
-def register_attention(name: str):
-    def deco(fn):
-        _ATTENTION_IMPLS[name] = fn
-        return fn
-    return deco
-
-
-def register_prefill(name: str):
-    def deco(fn):
-        _PREFILL_IMPLS[name] = fn
-        return fn
-    return deco
+# (table kind, registered name) -> name of the implementation whose math the
+# entry actually runs. Populated by ``register_*(..., fallback_of=...)`` and
+# surfaced by ``resolved_backends`` — a requested backend never silently
+# means something else (ISSUE-4 satellite).
+_FALLBACK_NOTES: dict[tuple[str, str], str] = {}
 
 
-def register_decode(name: str):
-    def deco(fn):
-        _DECODE_IMPLS[name] = fn
-        return fn
-    return deco
+def _make_register(table, kind):
+    def register(name: str, *, fallback_of: str | None = None):
+        def deco(fn):
+            table[name] = fn
+            if fallback_of is not None:
+                _FALLBACK_NOTES[(kind, name)] = fallback_of
+            return fn
+        return deco
+    return register
 
 
-def register_paged_prefill(name: str):
-    def deco(fn):
-        _PAGED_PREFILL_IMPLS[name] = fn
-        return fn
-    return deco
+register_attention = _make_register(_ATTENTION_IMPLS, "full-sequence")
+register_prefill = _make_register(_PREFILL_IMPLS, "prefill")
+register_decode = _make_register(_DECODE_IMPLS, "decode")
+register_paged_prefill = _make_register(_PAGED_PREFILL_IMPLS, "paged prefill")
+register_paged_decode = _make_register(_PAGED_DECODE_IMPLS, "paged decode")
 
 
-def register_paged_decode(name: str):
-    def deco(fn):
-        _PAGED_DECODE_IMPLS[name] = fn
-        return fn
-    return deco
+def resolved_backends(spec: AttentionSpec, *, paged: bool = False) -> list[dict]:
+    """What this spec actually runs, per dispatch table.
+
+    Returns one dict per table: ``{"kind", "requested", "resolved",
+    "fallback", "note"}`` where ``resolved`` differs from ``requested``
+    when the registered entry is a declared fallback onto another
+    implementation's math, and ``note`` carries the CPU interpret-mode
+    caveat for Pallas kernels. Serving engines log the non-trivial rows
+    once at startup (DESIGN.md §9).
+    """
+    _lookup(_ATTENTION_IMPLS, "ref", "full-sequence")  # force registration
+    kinds = [
+        ("full-sequence", spec.resolved_impl()),
+        ("prefill", spec.resolved_prefill_impl()),
+        ("decode", spec.resolved_decode_impl()),
+    ]
+    if paged:
+        kinds += [
+            ("paged prefill", spec.resolved_paged_impl()),
+            ("paged decode", spec.resolved_paged_impl()),
+        ]
+    try:
+        import jax
+        on_cpu = jax.default_backend() == "cpu"
+    except Exception:  # pragma: no cover
+        on_cpu = False
+    out = []
+    for kind, name in kinds:
+        resolved = _FALLBACK_NOTES.get((kind, name), name)
+        note = ""
+        if on_cpu and "pallas" in resolved:
+            note = "interpret mode (CPU has no Pallas TPU lowering)"
+        out.append({
+            "kind": kind,
+            "requested": name,
+            "resolved": resolved,
+            "fallback": resolved != name,
+            "note": note,
+        })
+    return out
 
 
 def _lookup(table, name, kind):
@@ -220,7 +269,7 @@ def dispatch_decode(spec: AttentionSpec, q, k_cache, v_cache, lengths, *,
 
 def dispatch_paged_prefill(spec: AttentionSpec, q, k_chunk, v_chunk, k_pool,
                            v_pool, rows, *, q_positions, chunk_valid, lengths,
-                           scale=None):
+                           scale=None, block_tables=None, page_size=0):
     """Chunked prefill against a paged KV pool (DESIGN.md §7).
 
     q: (B, H, C, D) chunk queries; k_chunk/v_chunk: (B, Hkv, C, ·) this
@@ -236,18 +285,23 @@ def dispatch_paged_prefill(spec: AttentionSpec, q, k_chunk, v_chunk, k_pool,
                  "paged prefill")
     return fn(q, k_chunk, v_chunk, k_pool, v_pool, rows, spec=spec,
               scale=scale, q_positions=q_positions, chunk_valid=chunk_valid,
-              lengths=lengths)
+              lengths=lengths, block_tables=block_tables,
+              page_size=page_size)
 
 
 def dispatch_paged_decode(spec: AttentionSpec, q, k_pool, v_pool, rows,
-                          lengths, *, scale=None):
+                          lengths, *, scale=None, block_tables=None,
+                          page_size=0):
     """Single-token decode against a paged KV pool.
 
     q: (B, H, D); pools: (pool_tokens, Hkv, ·); rows: (B, L) physical rows
     in logical position order (the current token's KV must already be
     written); lengths: (B,) valid entries *including* the current token.
     ``spec.window`` masks positions below ``lengths - window``.
+    ``block_tables``/``page_size``, when provided, let fused backends
+    resolve pool rows inside the kernel instead of gathering via ``rows``.
     """
     fn = _lookup(_PAGED_DECODE_IMPLS, spec.resolved_paged_impl(),
                  "paged decode")
-    return fn(q, k_pool, v_pool, rows, lengths, spec=spec, scale=scale)
+    return fn(q, k_pool, v_pool, rows, lengths, spec=spec, scale=scale,
+              block_tables=block_tables, page_size=page_size)

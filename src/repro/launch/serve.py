@@ -2,7 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
       --requests 8 --max-new 32 --chunk 32 [--variant expmul] \
-      [--kv-layout paged --page-size 16 --pool-blocks 0] [--kv-dtype int8]
+      [--kv-layout paged --page-size 16 --pool-blocks 0] [--kv-dtype int8] \
+      [--attention-impl pallas]
+
+``--attention-impl pallas`` selects the Pallas kernel family end-to-end —
+including the fused paged (+ quantized) flash-decode with in-kernel
+block-table indexing (DESIGN.md §9; interpret mode on CPU).
 """
 from __future__ import annotations
 
@@ -44,6 +49,11 @@ def main(argv=None):
                     help="KV-cache storage dtype (int8/fp8: quantize-on-"
                          "write + fused dequant; attention-only decoder "
                          "archs)")
+    ap.add_argument("--attention-impl", default=None,
+                    choices=["ref", "flash_jnp", "pallas"],
+                    help="attention backend family (None = cfg default; "
+                         "'pallas' enables the fused paged/quantized "
+                         "flash-decode kernel, DESIGN.md §9)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke, dtype="float32",
@@ -58,7 +68,8 @@ def main(argv=None):
                       kv_layout=args.kv_layout,
                       page_size=args.page_size or None,
                       pool_blocks=args.pool_blocks or None,
-                      kv_dtype=args.kv_dtype)
+                      kv_dtype=args.kv_dtype,
+                      attention_impl=args.attention_impl)
     rng = np.random.default_rng(0)
     reqs = [
         eng.submit(
@@ -71,7 +82,8 @@ def main(argv=None):
     t0 = time.time()
     eng.run()
     dt = time.time() - t0
-    print(f"variant={args.variant} kv={args.kv_layout}/{args.kv_dtype} "
+    print(f"variant={args.variant} impl={eng.attention_impl} "
+          f"kv={args.kv_layout}/{args.kv_dtype} "
           f"requests={len(reqs)} chunk={args.chunk} "
           f"steps={eng.ticks} (prefill {eng.prefill_steps} / decode "
           f"{eng.decode_steps}) generated={eng.tokens_generated} tokens "

@@ -222,15 +222,19 @@ def attn_init_paged_cache(cfg, pool_tokens, dtype):
 
 
 def attn_paged_decode_step(params, pool, x1, cfg, lengths, rows, write_row,
-                           *, window=None):
+                           *, window=None, block_tables=None, page_size=0):
     """Single-token decode through the block table.
 
     x1: (B, D); lengths: (B,) absolute position of the new token; rows:
     (B, L) physical rows of logical positions 0..L-1 (from ``slot_rows``);
     write_row: (B,) physical row of position ``lengths`` (from
     ``token_rows``). The new token's KV is scattered into the pool first,
-    then attention gathers the history through ``rows`` — idle slots carry
-    sentinel rows, so their writes drop and their scores are fully masked.
+    then attention reads the history — through ``rows`` for gather-style
+    backends, or straight from the pool via ``block_tables``/``page_size``
+    for the fused Pallas backends (in-kernel indexing, DESIGN.md §9).
+    Idle slots carry sentinel rows, so their writes drop and their scores
+    are fully masked. Windowed layers keep absolute positions and mask by
+    ``lengths - window`` on every backend.
     """
     q = jnp.einsum("bd,dhk->bhk", x1, params["wq"])
     k = jnp.einsum("bd,dhk->bhk", x1, params["wk"])
@@ -252,19 +256,22 @@ def attn_paged_decode_step(params, pool, x1, cfg, lengths, rows, write_row,
         o = dispatch_paged_decode(
             spec, q, QuantKV(new_pool["k"], new_pool["k_scale"]),
             QuantKV(new_pool["v"], new_pool["v_scale"]), rows, lengths + 1,
+            block_tables=block_tables, page_size=page_size,
         )
     else:
         new_pool = {"k": scatter_rows(pool["k"], write_row, k),
                     "v": scatter_rows(pool["v"], write_row, v)}
         o = dispatch_paged_decode(
             spec, q, new_pool["k"], new_pool["v"], rows, lengths + 1,
+            block_tables=block_tables, page_size=page_size,
         )
     out = jnp.einsum("bhk,hkd->bd", o, params["wo"])
     return new_pool, out
 
 
 def attn_paged_prefill_step(params, pool, x, cfg, lengths, n_valid, rows,
-                            chunk_rows, *, window=None):
+                            chunk_rows, *, window=None, block_tables=None,
+                            page_size=0):
     """Chunked prefill through the block table.
 
     x: (B, C, D) chunk; rows: (B, L) physical rows of the resident history;
@@ -296,6 +303,7 @@ def attn_paged_prefill_step(params, pool, x, cfg, lengths, n_valid, rows,
             QuantKV(pool["k"], pool["k_scale"]),
             QuantKV(pool["v"], pool["v_scale"]), rows,
             q_positions=positions, chunk_valid=chunk_valid, lengths=lengths,
+            block_tables=block_tables, page_size=page_size,
         )
         new_pool = {
             "k": scatter_rows(pool["k"], frows, flat(kq.codes), fvalid),
@@ -309,6 +317,7 @@ def attn_paged_prefill_step(params, pool, x, cfg, lengths, n_valid, rows,
         o = dispatch_paged_prefill(
             spec, q, k, v, pool["k"], pool["v"], rows, q_positions=positions,
             chunk_valid=chunk_valid, lengths=lengths,
+            block_tables=block_tables, page_size=page_size,
         )
         new_pool = {
             "k": scatter_rows(pool["k"], frows, flat(k), fvalid),

@@ -162,10 +162,11 @@ def mla_decode_step(params, cache, x1, cfg, lengths, *, window=None):
     # a recorded beyond-paper optimization — EXPERIMENTS.md §Perf)
     k, v = _expand_latents(params, kv_lat_c, k_rope_c, cfg)
     scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
-    # the expanded-latent K is rebuilt per step (never a ring buffer): xla
-    # path; expanded K/V are full precision, so the quant axis is pinned off
-    spec = AttentionSpec.from_config(cfg, kv_dtype="fp32").replace(
-        decode_impl="xla")
+    # expanded K/V are fresh full-precision activations (never a ring
+    # buffer, never quantized — the *latents* carry the quant axis), so the
+    # registry's quant axis is pinned off; the decode backend itself follows
+    # the config (the Pallas flash-decode kernel handles MLA's Dq != Dv)
+    spec = AttentionSpec.from_config(cfg, kv_dtype="fp32")
     o = dispatch_decode(spec, q1, k, v, lengths + 1, scale=scale)
     out = jnp.einsum("bhk,hkd->bd", o, params["wo"])
     return new_cache, out
@@ -244,8 +245,10 @@ def mla_paged_decode_step(params, pool, x1, cfg, lengths, rows, write_row):
         k_rope_c = gather_rows(new_pool["k_rope"], rows)  # (B, L, rope)
     k, v = _expand_latents(params, kv_lat_c, k_rope_c, cfg)
     scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
-    spec = AttentionSpec.from_config(cfg, kv_dtype="fp32").replace(
-        decode_impl="xla")
+    # the latent pool is the paged object (gathered + dequantized fused
+    # above); the expanded K/V decode is a *contiguous* dispatch and, like
+    # mla_decode_step, follows the config's decode backend
+    spec = AttentionSpec.from_config(cfg, kv_dtype="fp32")
     o = dispatch_decode(spec, q1, k, v, lengths + 1, scale=scale)
     out = jnp.einsum("bhk,hkd->bd", o, params["wo"])
     return new_pool, out

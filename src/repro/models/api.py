@@ -401,7 +401,8 @@ def prefill_paged(params, state, tokens, lengths, n_valid, block_tables,
         params["units"], state["caches"], x, cfg,
         lambda p, c, x, kind: block_paged_prefill(p, c, x, cfg, kind,
                                                   lengths, n_valid, rows,
-                                                  chunk_rows),
+                                                  chunk_rows, block_tables,
+                                                  page_size),
     )
     x = norm(params["final_norm"], x)
     last = jnp.clip(n_valid - 1, 0, C - 1)
@@ -428,7 +429,8 @@ def decode_step_paged(params, state, tokens1, lengths, block_tables,
         params["units"], state["caches"], x, cfg,
         lambda p, c, x, kind: block_paged_decode_step(p, c, x, cfg, kind,
                                                       lengths, rows,
-                                                      write_row),
+                                                      write_row, block_tables,
+                                                      page_size),
     )
     x = norm(params["final_norm"], x)
     logits = logits_apply(params["embed"], x, cfg)

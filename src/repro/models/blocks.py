@@ -134,13 +134,15 @@ def block_init_paged_cache(cfg, kind, pool_tokens, slots, dtype):
 
 
 def block_paged_prefill(params, cache, x, cfg, kind, lengths, n_valid, rows,
-                        chunk_rows):
+                        chunk_rows, block_tables=None, page_size=0):
     """Chunked prefill through one residual block, paged KV variant.
 
     rows: (B, L) physical rows of the resident history; chunk_rows: (B, C)
     physical rows for this chunk — both derived from the slot's block table
-    (identical for every layer). Recurrent kinds ignore them and run the
-    same gated single-token scan as the contiguous path.
+    (identical for every layer). ``block_tables``/``page_size`` ride along
+    for fused backends that index the pool in-kernel (DESIGN.md §9).
+    Recurrent kinds ignore them and run the same gated single-token scan as
+    the contiguous path.
     """
     _, norm = make_norm(cfg.norm)
     if kind != "attn":
@@ -153,7 +155,9 @@ def block_paged_prefill(params, cache, x, cfg, kind, lengths, n_valid, rows,
         window = cfg.window if cfg.window else None
         cache, h = attn_paged_prefill_step(params["mix"], cache, h, cfg,
                                            lengths, n_valid, rows, chunk_rows,
-                                           window=window)
+                                           window=window,
+                                           block_tables=block_tables,
+                                           page_size=page_size)
     x = x + h
     if "ffn" in params:
         h = norm(params["norm_ffn"], x)
@@ -166,7 +170,7 @@ def block_paged_prefill(params, cache, x, cfg, kind, lengths, n_valid, rows,
 
 
 def block_paged_decode_step(params, cache, x1, cfg, kind, lengths, rows,
-                            write_row):
+                            write_row, block_tables=None, page_size=0):
     """Single-token decode through one residual block, paged KV variant."""
     if kind != "attn":
         return block_decode_step(params, cache, x1, cfg, kind, lengths)
@@ -179,7 +183,9 @@ def block_paged_decode_step(params, cache, x1, cfg, kind, lengths, rows,
         window = cfg.window if cfg.window else None
         cache, h = attn_paged_decode_step(params["mix"], cache, h, cfg,
                                           lengths, rows, write_row,
-                                          window=window)
+                                          window=window,
+                                          block_tables=block_tables,
+                                          page_size=page_size)
     x1 = x1 + h
     if "ffn" in params:
         h = norm(params["norm_ffn"], x1)

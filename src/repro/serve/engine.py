@@ -54,14 +54,24 @@ instead of shrinking the footprint silently. ``memory_stats()`` reports
 both token and real-byte accounting (codes + scale pools). Quantized
 dtypes are valid only for attention-only decoder configs — see
 ``validate_kv_dtype``.
+
+``attention_impl`` overrides the config's backend family for the whole
+engine; ``"pallas"`` serves the decode tick on the fused paged/quantized
+flash-decode kernels (in-kernel block tables + in-register dequant,
+DESIGN.md §9). Non-obvious backend resolutions — declared fallbacks and
+the CPU interpret-mode caveat — are logged once at startup via
+``registry.resolved_backends``.
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels.registry import AttentionSpec, resolved_backends
 
 from repro.models.api import (
     decode_step,
@@ -74,6 +84,30 @@ from repro.models.api import (
 from repro.numerics.quant import KV_DTYPES
 from repro.serve.paged import BlockPool, blocks_for, kv_token_bytes
 from repro.serve.sampling import sample_token
+
+logger = logging.getLogger("repro.serve")
+
+# backend-resolution lines already reported this process (log once per
+# distinct message, not once per engine — benches build many engines)
+_LOGGED_BACKENDS: set[str] = set()
+
+
+def _log_resolved_backends(cfg, paged: bool):
+    """One startup line per non-obvious backend resolution (DESIGN.md §9):
+    declared fallbacks (a requested impl routing to another impl's math)
+    and the CPU interpret-mode caveat for Pallas kernels — so a config
+    knob can never silently mean something else."""
+    for row in resolved_backends(AttentionSpec.from_config(cfg), paged=paged):
+        if not (row["fallback"] or row["note"]):
+            continue
+        msg = f"attention {row['kind']}: requested {row['requested']!r}"
+        if row["fallback"]:
+            msg += f" -> runs {row['resolved']!r}"
+        if row["note"]:
+            msg += f" [{row['note']}]"
+        if msg not in _LOGGED_BACKENDS:
+            _LOGGED_BACKENDS.add(msg)
+            logger.info(msg)
 
 
 def stream_match_rate(ref_streams, streams) -> float:
@@ -137,10 +171,18 @@ class ServeEngine:
                  seed: int = 0, kv_layout: str = "contiguous",
                  page_size: int | None = None,
                  pool_blocks: int | None = None,
-                 kv_dtype: str | None = None):
+                 kv_dtype: str | None = None,
+                 attention_impl: str | None = None):
         assert kv_layout in ("contiguous", "paged"), kv_layout
         self.kv_dtype = validate_kv_dtype(cfg, kv_dtype)
         cfg = cfg.replace(kv_dtype=self.kv_dtype)
+        if attention_impl is not None:
+            # one knob selects the whole backend family (full/prefill/
+            # decode/paged follow ``impl`` through AttentionSpec resolution;
+            # "pallas" turns on the fused paged decode of DESIGN.md §9)
+            cfg = cfg.replace(attention_impl=attention_impl)
+        self.attention_impl = cfg.attention_impl
+        _log_resolved_backends(cfg, kv_layout == "paged")
         self.params = params
         self.cfg = cfg
         self.slots = slots

@@ -260,6 +260,47 @@ def test_paged_decode_gather_pallas_matches_gather_xla():
                                    atol=2e-5, rtol=2e-5)
 
 
+def test_token_rows_out_of_table_positions_hit_no_valid_row():
+    """Adversarial block table: positions outside the table span (negative,
+    or past max_blocks * page_size) must resolve to a row no pool contains.
+    The old clamp-into-table behavior aliased a negative position onto
+    *block 0's row 0* — block 0 here is owned by another sequence, so an
+    ungated scatter would have corrupted a neighbour's KV."""
+    from repro.kernels.paged import (
+        gather_rows,
+        scatter_rows,
+        token_rows,
+    )
+
+    ps, pool_blocks = 4, 6
+    pool_tokens = pool_blocks * ps
+    # slot 0 owns block 0 (the old clamp's alias target); slot 1 owns
+    # blocks 5 and 2 with a sentinel tail
+    bt = jnp.asarray(np.array([[0, 3], [5, 2]], np.int32))
+    adversarial = jnp.asarray(np.array([[-1, -4, 8, 9], [-2, 11, 100, -8]],
+                                       np.int32))
+    rows = token_rows(bt, adversarial, ps)
+    assert (np.asarray(rows) >= pool_tokens).all(), np.asarray(rows)
+
+    # end-to-end: scattering "new KV" at those rows must leave the pool
+    # untouched, and gathering them must read the fill value (zero)
+    pool = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (pool_tokens, 3)), jnp.float32)
+    vals = jnp.full((adversarial.size, 3), 7.0, jnp.float32)
+    new_pool = scatter_rows(pool, rows.reshape(-1), vals)
+    np.testing.assert_array_equal(np.asarray(new_pool), np.asarray(pool))
+    got = gather_rows(pool, rows)
+    assert float(jnp.max(jnp.abs(got))) == 0.0
+
+    # in-table positions still resolve exactly as before (incl. sentinels)
+    ok = token_rows(bt, jnp.asarray(np.array([[0, 5], [3, 6]], np.int32)), ps)
+    np.testing.assert_array_equal(
+        np.asarray(ok), [[0 * ps + 0, 3 * ps + 1], [5 * ps + 3, 2 * ps + 2]])
+    sent = token_rows(jnp.asarray(np.array([[6, 6]], np.int32)),
+                      jnp.asarray(np.array([[2]], np.int32)), ps)
+    assert int(sent[0, 0]) == 6 * ps + 2  # past the pool end -> dropped
+
+
 def test_engine_pool_too_small_for_one_request_raises():
     params, cfg = _setup("qwen2-0.5b")
     eng = ServeEngine(params, cfg, slots=1, max_len=64, chunk_size=8,
