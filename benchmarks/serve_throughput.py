@@ -214,9 +214,10 @@ def main(argv=None):
             assert streams["contiguous"] == streams["paged"], \
                 f"paged streams diverged from contiguous ({variant}/{kv_dtype})"
 
-    # fused-vs-gather pair (DESIGN.md §9): rerun the exact paged cell with
-    # the Pallas fused decode (in-kernel block tables + in-register dequant)
-    # and assert its temp-0 streams are identical to the gather backend's —
+    # fused-vs-gather pair (DESIGN.md §9/§10): rerun the exact paged cell
+    # with the Pallas fused serving kernels — both ticks: flash-decode AND
+    # chunked flash-prefill (in-kernel block tables + in-register dequant) —
+    # and assert its temp-0 streams are identical to the gather backend's;
     # the attention_impl column distinguishes the rows in BENCH_serve.json.
     fused_dtype = "int8" if "int8" in kv_dtypes else "fp32"
     r, outs = bench_run(
@@ -233,7 +234,7 @@ def main(argv=None):
     print(f"  exact  /{fused_dtype:5s}/paged[pallas]: prefill "
           f"{r['prefill_tok_per_s']:9.1f} tok/s, decode "
           f"{r['decode_tok_per_s']:7.1f} tok/s, streams == gather backend "
-          f"(fused decode; CPU runs the kernel in interpret mode)")
+          f"(fused prefill+decode; CPU runs the kernels in interpret mode)")
 
     def pick(variant, kv_dtype, kv_layout):
         # the fused (pallas) rerun shares this triple with its gather row:

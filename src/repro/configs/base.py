@@ -74,7 +74,7 @@ class ModelConfig:
     attention_block_k: int = 512
     attention_q_chunks: int = 4            # causal block skipping (1 = off)
     attention_decode_impl: str | None = None   # None: derived from impl
-    attention_prefill_impl: str | None = None  # None: masked_xla
+    attention_prefill_impl: str | None = None  # None: follows impl family
     # None: follows impl — "pallas" selects the fused paged decode kernel
     # (in-kernel block tables, DESIGN.md §9), otherwise gather_xla
     attention_paged_impl: str | None = None

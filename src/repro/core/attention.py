@@ -30,7 +30,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.flash.ops import flash_attention_fwd
+from repro.kernels.flash.ops import (
+    flash_attention_fwd,
+    fused_paged_prefill_attention_pallas,
+    paged_prefill_attention_pallas,
+    prefill_attention_pallas,
+)
 from repro.kernels.decode.ops import (
     decode_attention_pallas,
     fused_paged_decode_attention_pallas,
@@ -311,6 +316,32 @@ def prefill_attention(q, k, v, *, q_positions, kv_positions, kv_valid,
     return o.reshape(B, H, C, Dv).astype(q.dtype)
 
 
+def prefill_positions(lengths, n_valid, span, C, *, rolling):
+    """Positional tensors implied by the prefill convention (DESIGN.md §10).
+
+    lengths/n_valid: (B,); span: cache slot count S; C: chunk length.
+    Returns (q_positions (B, C), kv_positions (B, S+C), kv_valid (B, S+C))
+    for the concatenated [cache ++ chunk] ordering. ``rolling`` selects the
+    windowed rolling-buffer slot convention: slot j holds the newest
+    written position congruent to j modulo the span — exact because
+    softmax over a valid set is order-invariant (DESIGN.md §6/§10).
+    """
+    B = lengths.shape[0]
+    idx = jnp.arange(C)[None, :]
+    q_positions = lengths[:, None] + idx
+    chunk_valid = idx < n_valid[:, None]
+    slot = jnp.arange(span)[None, :]
+    if rolling:
+        last = lengths[:, None] - 1
+        cache_pos = last - ((last - slot) % span)
+    else:
+        cache_pos = jnp.broadcast_to(slot, (B, span))
+    cache_valid = (cache_pos >= 0) & (cache_pos < lengths[:, None])
+    kv_positions = jnp.concatenate([cache_pos, q_positions], axis=1)
+    kv_valid = jnp.concatenate([cache_valid, chunk_valid], axis=1)
+    return q_positions, kv_positions, kv_valid
+
+
 # ---------------------------------------------------------------------------
 # Registry-backed dispatch (DESIGN.md §3)
 # ---------------------------------------------------------------------------
@@ -340,12 +371,32 @@ def _pallas_impl(q, k, v, *, spec, causal, scale):
 
 
 @register_prefill("masked_xla")
-def _prefill_masked_xla(q, k, v, *, spec, scale, q_positions, kv_positions,
-                        kv_valid):
-    return prefill_attention(q, k, v, q_positions=q_positions,
-                             kv_positions=kv_positions, kv_valid=kv_valid,
-                             scale=scale, window=spec.window,
-                             variant=spec.variant, use_ste=spec.use_ste)
+def _prefill_masked_xla(q, k_cache, v_cache, k_chunk, v_chunk, *, spec,
+                        scale, lengths, n_valid, rolling):
+    """Concat [cache ++ chunk], rebuild the implied positional tensors, and
+    run the one-pass masked softmax — the XLA prefill baseline every fused
+    kernel is pinned against."""
+    q_positions, kv_positions, kv_valid = prefill_positions(
+        lengths, n_valid, k_cache.shape[2], q.shape[2], rolling=rolling)
+    return prefill_attention(
+        q, jnp.concatenate([k_cache, k_chunk], axis=2),
+        jnp.concatenate([v_cache, v_chunk], axis=2),
+        q_positions=q_positions, kv_positions=kv_positions,
+        kv_valid=kv_valid, scale=scale, window=spec.window,
+        variant=spec.variant, use_ste=spec.use_ste)
+
+
+@register_prefill("pallas")
+def _prefill_pallas(q, k_cache, v_cache, k_chunk, v_chunk, *, spec, scale,
+                    lengths, n_valid, rolling):
+    """Fused chunked prefill (DESIGN.md §10): the kernel walks the cache
+    and the chunk as separate KV grid segments, masking positionally
+    in-kernel — no materialized concatenation. Dv != Dq capable, so MLA
+    prefill dispatches here too."""
+    return prefill_attention_pallas(
+        q, k_cache, v_cache, k_chunk, v_chunk, lengths, n_valid,
+        scale=scale, variant=spec.variant, window=spec.window,
+        rolling=rolling, block_q=spec.block_q, block_k=spec.block_k)
 
 
 def _masked_decode_xla(q, k_cache, v_cache, mask, *, variant, scale):
@@ -419,19 +470,42 @@ def _paged_prefill_gather_xla(q, k_chunk, v_chunk, k_pool, v_pool, rows, *,
         variant=spec.variant, use_ste=spec.use_ste)
 
 
-@register_paged_prefill("gather_pallas", fallback_of="gather_xla")
-@register_paged_prefill("pallas", fallback_of="gather_xla")
+@register_paged_prefill("gather_pallas")
 def _paged_prefill_gather_pallas(q, k_chunk, v_chunk, k_pool, v_pool, rows,
                                  *, spec, scale, q_positions, chunk_valid,
                                  lengths, block_tables=None, page_size=0):
-    # No Pallas prefill kernel yet (positional masks): the "pallas" and
-    # "gather_pallas" families use Pallas kernels for decode and fall back
-    # to the masked XLA gather math for prefill, so one paged_impl knob
-    # selects a working pair. The fallback is declared above and reported
-    # by resolved_backends() — never silent (DESIGN.md §9).
-    return _paged_prefill_gather_xla(
-        q, k_chunk, v_chunk, k_pool, v_pool, rows, spec=spec, scale=scale,
-        q_positions=q_positions, chunk_valid=chunk_valid, lengths=lengths)
+    """Gather-then-kernel paged prefill: materialize the history in logical
+    order (XLA gather), then the contiguous Pallas prefill kernel with
+    absolute positions. The baseline the fused kernel is benchmarked
+    against, and the identical-tile expmul parity oracle when ``block_k``
+    equals the page size (DESIGN.md §10)."""
+    n_valid = jnp.sum(chunk_valid.astype(jnp.int32), axis=1)
+    return paged_prefill_attention_pallas(
+        q, k_chunk, v_chunk, k_pool, v_pool, rows, lengths, n_valid,
+        scale=scale, variant=spec.variant, window=spec.window,
+        block_q=spec.block_q,
+        block_k=page_size if page_size else spec.block_k)
+
+
+@register_paged_prefill("pallas")
+def _paged_prefill_pallas(q, k_chunk, v_chunk, k_pool, v_pool, rows, *,
+                          spec, scale, q_positions, chunk_valid, lengths,
+                          block_tables=None, page_size=0):
+    """Fused paged prefill (DESIGN.md §10): block-table indexing happens
+    inside the kernel's index maps, so the chunk attends to the history
+    straight out of the pool — no materialized gather copy. Windows mask
+    in-kernel with whole-page skipping. Callers that dispatch without the
+    table operands (``rows`` only) get the gather-then-kernel form."""
+    if block_tables is None:
+        return _paged_prefill_gather_pallas(
+            q, k_chunk, v_chunk, k_pool, v_pool, rows, spec=spec,
+            scale=scale, q_positions=q_positions, chunk_valid=chunk_valid,
+            lengths=lengths)
+    n_valid = jnp.sum(chunk_valid.astype(jnp.int32), axis=1)
+    return fused_paged_prefill_attention_pallas(
+        q, k_chunk, v_chunk, k_pool, v_pool, block_tables, lengths, n_valid,
+        page_size=page_size, scale=scale, variant=spec.variant,
+        window=spec.window, block_q=spec.block_q)
 
 
 @register_paged_decode("pallas")

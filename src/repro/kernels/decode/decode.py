@@ -53,62 +53,12 @@ except Exception:  # pragma: no cover
     pltpu = None
     _VMEM = None
 
-from repro.numerics.log2exp import apply_pow2_scale, log2exp_lhat, pow2_neg
-
-MASK_VALUE = -1e30
-_LANES = 128
-
-
-def _online_softmax_step(q, k, v, k_scale, v_scale, mask,
-                         m_scr, l_scr, acc_scr, *, scale, variant):
-    """One KV tile of the online-softmax recurrence (shared by all kernels).
-
-    q: (group, D) f32; k: (bk, D) f32 values — or raw codes when ``k_scale``
-    is given; v: (bk, Dv) values or codes; k_scale/v_scale: (bk,) f32
-    per-row scales or None; mask: (group, bk) bool of valid columns.
-
-    Quantized fusion: scores take one column rescale after the q·codes
-    matmul, and the value matmul folds the scale into the probability tile
-    — for the ExpMul variant the pow2 weights therefore multiply the
-    still-quantized value codes. The denominator uses the dequantized
-    scores (k_scale is already inside ``s``), never v_scale.
-    """
-    s = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    ) * scale
-    if k_scale is not None:
-        s = s * k_scale[None, :]
-    s = jnp.where(mask, s, MASK_VALUE)
-    m_prev = m_scr[...][:, :1]
-    l_prev = l_scr[...][:, :1]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    if variant == "exact":
-        alpha = jnp.exp(m_prev - m_new)
-        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
-        l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
-        pv = p if v_scale is None else p * v_scale[None, :]
-        acc = acc_scr[...] * alpha + jax.lax.dot_general(
-            pv, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-        )
-    else:
-        lr = log2exp_lhat(m_prev - m_new)
-        p = jnp.where(mask, pow2_neg(log2exp_lhat(s - m_new), jnp.float32), 0.0)
-        l_new = apply_pow2_scale(l_prev, lr) + jnp.sum(p, axis=1, keepdims=True)
-        pv = p if v_scale is None else p * v_scale[None, :]
-        acc = apply_pow2_scale(
-            acc_scr[...], jnp.broadcast_to(lr, acc_scr.shape)
-        ) + jax.lax.dot_general(
-            pv, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-        )
-    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
-    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
-    acc_scr[...] = acc
-
-
-def _finalize(o_ref, l_scr, acc_scr):
-    l = l_scr[...][:, :1]
-    l = jnp.where(l == 0.0, 1.0, l)
-    o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+from repro.kernels.flash.tile import (
+    LANES as _LANES,
+    MASK_VALUE,
+    finalize_tiles as _finalize,
+    online_softmax_tile as _online_softmax_step,
+)
 
 
 # ---------------------------------------------------------------------------

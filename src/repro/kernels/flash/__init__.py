@@ -1,4 +1,11 @@
-from repro.kernels.flash.ops import flash_attention_fwd
+from repro.kernels.flash.ops import (
+    flash_attention_fwd,
+    fused_paged_prefill_attention_pallas,
+    paged_prefill_attention_pallas,
+    prefill_attention_pallas,
+    quant_fused_paged_prefill_attention_pallas,
+    quant_prefill_attention_pallas,
+)
 from repro.kernels.flash.ref import attention_ref, flash2_blocked_ref, flash2_alg4_ref
 
 __all__ = [
@@ -6,4 +13,9 @@ __all__ = [
     "attention_ref",
     "flash2_blocked_ref",
     "flash2_alg4_ref",
+    "prefill_attention_pallas",
+    "quant_prefill_attention_pallas",
+    "fused_paged_prefill_attention_pallas",
+    "quant_fused_paged_prefill_attention_pallas",
+    "paged_prefill_attention_pallas",
 ]

@@ -29,10 +29,12 @@ except Exception:  # pragma: no cover
     pltpu = None
     _VMEM = None
 
-from repro.numerics.log2exp import apply_pow2_scale, log2exp_lhat, pow2_neg
-
-MASK_VALUE = -1e30
-_LANES = 128
+from repro.kernels.flash.tile import (
+    LANES as _LANES,
+    MASK_VALUE,
+    finalize_tiles,
+    online_softmax_tile,
+)
 
 
 def _fwd_kernel(
@@ -73,11 +75,6 @@ def _fwd_kernel(
     @pl.when(run)
     def _body():
         q = q_ref[0].astype(jnp.float32)        # (bq, d)
-        k = k_ref[0].astype(jnp.float32)        # (bk, d)
-        v = v_ref[0].astype(jnp.float32)        # (bk, d)
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        ) * scale
         rows = r0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
         cols = c0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
         mask = cols < kv_len
@@ -85,43 +82,14 @@ def _fwd_kernel(
             mask = mask & (rows >= cols)
         if window is not None:
             mask = mask & ((rows - cols) < window)
-        s = jnp.where(mask, s, MASK_VALUE)
-
-        m_prev = m_scr[...][:, :1]              # (bq, 1)
-        l_prev = l_scr[...][:, :1]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        if variant == "exact":
-            alpha = jnp.exp(m_prev - m_new)
-            p = jnp.exp(s - m_new)
-            p = jnp.where(mask, p, 0.0)
-            l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
-            acc = acc_scr[...] * alpha + jax.lax.dot_general(
-                p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-            )
-        elif variant == "expmul":
-            # paper Alg. 3/4: integer shift-add Log2Exp; probability tile is
-            # an exact power of two assembled from bits; state rescale is an
-            # exponent-field subtraction. No exp, no FP multiply.
-            lr = log2exp_lhat(m_prev - m_new)                       # (bq, 1)
-            p = pow2_neg(log2exp_lhat(s - m_new), jnp.float32)      # (bq, bk)
-            p = jnp.where(mask, p, 0.0)
-            l_new = apply_pow2_scale(l_prev, lr) + jnp.sum(p, axis=1, keepdims=True)
-            acc = apply_pow2_scale(
-                acc_scr[...], jnp.broadcast_to(lr, acc_scr.shape)
-            ) + jax.lax.dot_general(
-                p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-            )
-        else:
-            raise ValueError(variant)
-        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
-        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
-        acc_scr[...] = acc
+        online_softmax_tile(
+            q, k_ref[0].astype(jnp.float32), v_ref[0].astype(jnp.float32),
+            None, None, mask, m_scr, l_scr, acc_scr,
+            scale=scale, variant=variant)
 
     @pl.when(ki == nk - 1)
     def _fin():
-        l = l_scr[...][:, :1]
-        l = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        finalize_tiles(o_ref, l_scr, acc_scr)
 
 
 @functools.partial(

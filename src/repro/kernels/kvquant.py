@@ -21,24 +21,24 @@ is the paged form (codes pool + parallel scale pool, DESIGN.md §7/§8).
 Recurrent block kinds have no KV cache and bypass quantization entirely,
 exactly as they bypass paging.
 
-The ``pallas*_q`` decode names are real fused kernels (DESIGN.md §9), not
-XLA aliases:
+The ``pallas*_q`` names are real fused kernels on *every* table
+(DESIGN.md §9 decode, §10 prefill), not XLA aliases:
 
-  * ``pallas_q`` decode loads int8/fp8 codes + f32 scale rows straight
-    from the contiguous cache and dequantizes in-register inside the
-    flash-decode kernel — score matmul on raw codes with one column
-    rescale, value matmul with the (ExpMul pow2 or exact softmax) weights
-    applied to the still-quantized value tiles;
-  * the ``pallas_q`` *paged* decode additionally resolves the block table
-    inside the kernel's index maps, so a decode tick reads only codes,
-    scales, and the table — the materialized fp32 KV copy of the
-    ``gather_*`` paths never exists (benchmarks/decode_microbench.py
-    tracks the bytes/token gap).
+  * ``pallas_q`` decode and prefill load int8/fp8 codes + f32 scale rows
+    straight from the contiguous cache (prefill also takes the chunk's
+    fresh codes) and dequantize in-register inside the kernel — score
+    matmul on raw codes with one column rescale, value matmul with the
+    (ExpMul pow2 or exact softmax) weights applied to the still-quantized
+    value tiles;
+  * the ``pallas_q`` *paged* decode and prefill additionally resolve the
+    block table inside the kernel's index maps, so a serving tick reads
+    only codes, scales, and the table — the materialized fp32 KV copy of
+    the ``gather_*`` paths never exists (benchmarks/decode_microbench.py
+    and benchmarks/prefill_microbench.py track the bytes gap).
 
-Only the *prefill* names remain declared fallbacks onto the fused-dequant
-XLA gather math (no Pallas prefill kernel) — reported by
-``registry.resolved_backends``, never silent. On CPU the kernels run in
-Pallas interpret mode.
+No registered name is a declared fallback anymore;
+``registry.resolved_backends`` would report one if it ever reappeared.
+On CPU the kernels run in Pallas interpret mode.
 """
 from __future__ import annotations
 
@@ -47,10 +47,16 @@ import jax.numpy as jnp
 from repro.core.attention import (
     _masked_decode_xla,
     prefill_attention,
+    prefill_positions,
 )
 from repro.kernels.decode.ops import (
     quant_decode_attention_pallas,
     quant_fused_paged_decode_attention_pallas,
+)
+from repro.kernels.flash.ops import (
+    prefill_attention_pallas,
+    quant_fused_paged_prefill_attention_pallas,
+    quant_prefill_attention_pallas,
 )
 from repro.kernels.paged import gather_rows, scatter_rows
 from repro.kernels.registry import (
@@ -127,15 +133,38 @@ for _base in ("ref", "flash_jnp", "pallas"):
 # Contiguous prefill / decode: QuantKV caches, fused dequant
 # ---------------------------------------------------------------------------
 @register_prefill("masked_xla_q")
-def _prefill_masked_xla_q(q, k, v, *, spec, scale, q_positions, kv_positions,
-                          kv_valid):
-    """k/v: QuantKV over the concatenated [cache ++ chunk] token rows (the
-    layer concatenates codes and scales; the chunk is quantized on write,
-    so chunk queries attend to the same values decode will later read)."""
+def _prefill_masked_xla_q(q, k_cache, v_cache, k_chunk, v_chunk, *, spec,
+                          scale, lengths, n_valid, rolling):
+    """Cache and chunk arrive as QuantKV (the chunk is quantized on write,
+    so chunk queries attend to the same values decode will later read);
+    dequant is one fused multiply feeding the concat + positional-masking
+    math of the fp32 path."""
+    q_positions, kv_positions, kv_valid = prefill_positions(
+        lengths, n_valid, k_cache.codes.shape[2], q.shape[2],
+        rolling=rolling)
     return prefill_attention(
-        q, _dequant(k, spec), _dequant(v, spec), q_positions=q_positions,
-        kv_positions=kv_positions, kv_valid=kv_valid, scale=scale,
-        window=spec.window, variant=spec.variant, use_ste=spec.use_ste)
+        q,
+        jnp.concatenate([_dequant(k_cache, spec), _dequant(k_chunk, spec)],
+                        axis=2),
+        jnp.concatenate([_dequant(v_cache, spec), _dequant(v_chunk, spec)],
+                        axis=2),
+        q_positions=q_positions, kv_positions=kv_positions,
+        kv_valid=kv_valid, scale=scale, window=spec.window,
+        variant=spec.variant, use_ste=spec.use_ste)
+
+
+@register_prefill("pallas_q")
+def _prefill_pallas_q(q, k_cache, v_cache, k_chunk, v_chunk, *, spec, scale,
+                      lengths, n_valid, rolling):
+    """Quantized fused prefill (DESIGN.md §10): cache and chunk codes +
+    scale rows go into the kernel as-is; dequant is fused in-register into
+    the score/value matmuls — the fp32 [cache ++ chunk] never exists."""
+    return quant_prefill_attention_pallas(
+        q, k_cache.codes, v_cache.codes, k_cache.scale, v_cache.scale,
+        k_chunk.codes, v_chunk.codes, k_chunk.scale, v_chunk.scale,
+        lengths, n_valid, scale=scale, variant=spec.variant,
+        window=spec.window, rolling=rolling, block_q=spec.block_q,
+        block_k=spec.block_k)
 
 
 def _decode_q(q, k_cache, v_cache, lengths, *, spec, scale):
@@ -221,13 +250,64 @@ def _paged_decode_pallas_q(q, k_pool, v_pool, rows, lengths, *, spec, scale,
         variant=spec.variant, window=spec.window)
 
 
+@register_paged_prefill("gather_pallas_q")
+def _paged_prefill_gather_pallas_q(q, k_chunk, v_chunk, k_pool, v_pool,
+                                   rows, *, spec, scale, q_positions,
+                                   chunk_valid, lengths, block_tables=None,
+                                   page_size=0):
+    """Gather+dequant the paged history into logical order, dequant the
+    chunk, then the contiguous Pallas prefill kernel — the identical-tile
+    expmul parity oracle for the fused ``pallas_q`` paged prefill when
+    ``block_k`` equals the page size (DESIGN.md §10)."""
+    n_valid = jnp.sum(chunk_valid.astype(jnp.int32), axis=1)
+    return prefill_attention_pallas(
+        q, _gather_dequant_kv(k_pool, rows, spec),
+        _gather_dequant_kv(v_pool, rows, spec),
+        _dequant(k_chunk, spec), _dequant(v_chunk, spec), lengths, n_valid,
+        scale=scale, variant=spec.variant, window=spec.window,
+        rolling=False, block_q=spec.block_q,
+        block_k=page_size if page_size else spec.block_k)
+
+
+@register_paged_prefill("pallas_q")
+def _paged_prefill_pallas_q(q, k_chunk, v_chunk, k_pool, v_pool, rows, *,
+                            spec, scale, q_positions, chunk_valid, lengths,
+                            block_tables=None, page_size=0):
+    """The fully fused prefill serving kernel: paged + quantized. Reads
+    only code pools, scale pools, block tables, and the already-quantized
+    chunk — in-kernel block-table indexing composed with in-register
+    dequant (DESIGN.md §10). Dispatches without table operands fall back
+    to the gather+dequant-then-kernel form."""
+    if block_tables is None:
+        return _paged_prefill_gather_pallas_q(
+            q, k_chunk, v_chunk, k_pool, v_pool, rows, spec=spec,
+            scale=scale, q_positions=q_positions, chunk_valid=chunk_valid,
+            lengths=lengths)
+    n_valid = jnp.sum(chunk_valid.astype(jnp.int32), axis=1)
+    return quant_fused_paged_prefill_attention_pallas(
+        q, k_chunk.codes, v_chunk.codes, k_chunk.scale, v_chunk.scale,
+        k_pool.codes, v_pool.codes, k_pool.scale, v_pool.scale,
+        block_tables, lengths, n_valid, page_size=page_size, scale=scale,
+        variant=spec.variant, window=spec.window, block_q=spec.block_q)
+
+
+@register_paged_decode("gather_pallas_q")
+def _paged_decode_gather_pallas_q(q, k_pool, v_pool, rows, lengths, *, spec,
+                                  scale, block_tables=None, page_size=0):
+    """Gather+dequant-then-kernel paged decode: the quantized twin of the
+    fp32 ``gather_pallas`` decode. Windowed layers need the positional
+    mask, which the contiguous flash-decode kernel does not carry — they
+    take the gather+dequant XLA path (the fused ``pallas_q`` backend masks
+    windows in-kernel)."""
+    if spec.window is not None:
+        return _paged_decode_q(q, k_pool, v_pool, rows, lengths, spec=spec,
+                               scale=scale)
+    from repro.kernels.decode.ops import decode_attention_pallas
+    return decode_attention_pallas(
+        q, _gather_dequant_kv(k_pool, rows, spec),
+        _gather_dequant_kv(v_pool, rows, spec), lengths, scale=scale,
+        variant=spec.variant, block_k=spec.decode_block_k)
+
+
 register_paged_prefill("gather_xla_q")(_paged_prefill_q)
-# no Pallas prefill kernel: declared fallbacks onto the fused-dequant XLA
-# gather math, reported by registry.resolved_backends (DESIGN.md §9)
-register_paged_prefill("gather_pallas_q", fallback_of="gather_xla_q")(
-    _paged_prefill_q)
-register_paged_prefill("pallas_q", fallback_of="gather_xla_q")(
-    _paged_prefill_q)
 register_paged_decode("gather_xla_q")(_paged_decode_q)
-register_paged_decode("gather_pallas_q", fallback_of="gather_xla_q")(
-    _paged_decode_q)

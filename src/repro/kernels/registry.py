@@ -12,8 +12,9 @@ in train, serve, and bench.
 Five tables, one per calling convention:
 
   full sequence   fn(q, k, v, *, spec, causal, scale)       -> (B, H, Sq, Dv)
-  chunked prefill fn(q, k, v, *, spec, scale,
-                     q_positions, kv_positions, kv_valid)   -> (B, H, C, Dv)
+  chunked prefill fn(q, k_cache, v_cache, k_chunk, v_chunk,
+                     *, spec, scale, lengths, n_valid,
+                     rolling)                               -> (B, H, C, Dv)
   decode          fn(q, k_cache, v_cache, lengths,
                      *, spec, scale)                        -> (B, H, Dv)
   paged prefill   fn(q, k_chunk, v_chunk, k_pool, v_pool,
@@ -21,6 +22,14 @@ Five tables, one per calling convention:
                      chunk_valid, lengths)                  -> (B, H, C, Dv)
   paged decode    fn(q, k_pool, v_pool, rows, lengths,
                      *, spec, scale)                        -> (B, H, Dv)
+
+The chunked-prefill convention (DESIGN.md §10) passes the resident cache
+and the chunk's fresh KV as *separate* operands plus two per-sequence
+scalars (``lengths`` tokens resident, ``n_valid`` valid chunk tokens;
+``rolling`` marks windowed rolling-buffer caches): positions and validity
+are derivable from those, so fused backends mask in-kernel and never
+materialize the [cache ++ chunk] concatenation, while the masked-XLA
+backend rebuilds the positional tensors itself.
 
 The paged conventions (DESIGN.md §7) take KV as a flat physical token pool
 ``(pool_tokens, Hkv, ·)`` plus ``rows (B, L)`` — per-sequence physical row
@@ -40,11 +49,13 @@ under a new name and become selectable purely through the model config.
 
 A registration may declare itself a **fallback** (``register_*(name,
 fallback_of="other")``) when the name routes to another implementation's
-math rather than a dedicated kernel — e.g. there is no Pallas *prefill*
-kernel, so the ``pallas`` paged-prefill entry reuses the masked-XLA gather
-math. ``resolved_backends(spec)`` reports, per dispatch table, what a spec
-actually runs (including such fallbacks and the CPU interpret-mode caveat
-for Pallas kernels); ``ServeEngine`` logs the non-obvious rows once at
+math rather than a dedicated kernel. Since the Pallas prefill kernels
+landed (DESIGN.md §10) every built-in registration is a real
+implementation — no table carries a ``fallback_of`` declaration — but the
+mechanism stays so a future partial backend can never be silent.
+``resolved_backends(spec)`` reports, per dispatch table, what a spec
+actually runs (declared fallbacks and the CPU interpret-mode caveat for
+Pallas kernels); ``ServeEngine`` logs the non-obvious rows once at
 startup so a requested impl can never silently mean something else.
 
 ``AttentionSpec.kv_dtype`` adds a quantized-KV axis to every table
@@ -70,7 +81,7 @@ class AttentionSpec:
 
     impl: str = "flash_jnp"          # ref | flash_jnp | pallas | ...
     decode_impl: str | None = None   # xla | pallas | ...
-    prefill_impl: str | None = None  # masked_xla | ...
+    prefill_impl: str | None = None  # masked_xla | pallas | ...
     paged_impl: str | None = None    # gather_xla | ... (prefill and decode)
     variant: str = "exact"           # exact | expmul
     use_ste: bool = False            # straight-through grads for expmul
@@ -105,7 +116,12 @@ class AttentionSpec:
         return self._q("pallas" if self.impl == "pallas" else "xla")
 
     def resolved_prefill_impl(self) -> str:
-        return self._q(self.prefill_impl or "masked_xla")
+        if self.prefill_impl is not None:
+            return self._q(self.prefill_impl)
+        # like decode: one ``impl="pallas"`` knob selects the whole family,
+        # and since DESIGN.md §10 the pallas prefill entry is a real fused
+        # kernel, not a fallback
+        return self._q("pallas" if self.impl == "pallas" else "masked_xla")
 
     def resolved_paged_impl(self) -> str:
         if self.paged_impl is not None:
@@ -244,20 +260,29 @@ def dispatch_attention(spec: AttentionSpec, q, k, v, *, causal=True,
     return fn(q, k, v, spec=spec, causal=causal, scale=scale)
 
 
-def dispatch_prefill(spec: AttentionSpec, q, k, v, *, q_positions,
-                     kv_positions, kv_valid, scale=None):
-    """Chunked-prefill attention against gathered KV (cache ++ chunk).
+def dispatch_prefill(spec: AttentionSpec, q, k_cache, v_cache, k_chunk,
+                     v_chunk, *, lengths, n_valid, scale=None,
+                     rolling=False):
+    """Chunked-prefill attention: chunk queries over [cache ++ chunk].
 
-    q: (B, H, C, D) chunk queries; k/v: (B, Hkv, T, ·);
-    q_positions: (B, C) absolute token positions of the chunk;
-    kv_positions: (B, T) absolute positions of each KV entry;
-    kv_valid: (B, T) bool — False rows are masked out entirely.
-    Causality is positional: query i sees KV j iff kv_positions[b, j] <=
-    q_positions[b, i] (and within ``spec.window`` when set).
+    q: (B, H, C, D) chunk queries; k_cache/v_cache: (B, Hkv, S, ·) the
+    resident cache buffers (raw arrays, or ``QuantKV`` codes + scales for
+    quantized specs); k_chunk/v_chunk: (B, Hkv, C, ·) this chunk's fresh
+    KV (same representation); lengths: (B,) tokens already resident;
+    n_valid: (B,) valid chunk tokens (idle rows pass 0 and produce
+    garbage-but-finite outputs).
+
+    Positions are implied: chunk token i sits at ``lengths + i``; cache
+    slot j holds position j (``rolling=False``) or the rolling-buffer
+    position ``last - ((last - j) % S)`` (``rolling=True`` — windowed
+    layers). Query i sees KV j iff position_j <= position_i (and within
+    ``spec.window`` when set). Backends either rebuild the positional
+    tensors (masked_xla) or mask in-kernel without materializing the
+    concatenation (pallas — DESIGN.md §10).
     """
     fn = _lookup(_PREFILL_IMPLS, spec.resolved_prefill_impl(), "prefill")
-    return fn(q, k, v, spec=spec, scale=scale, q_positions=q_positions,
-              kv_positions=kv_positions, kv_valid=kv_valid)
+    return fn(q, k_cache, v_cache, k_chunk, v_chunk, spec=spec, scale=scale,
+              lengths=lengths, n_valid=n_valid, rolling=rolling)
 
 
 def dispatch_decode(spec: AttentionSpec, q, k_cache, v_cache, lengths, *,

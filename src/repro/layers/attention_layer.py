@@ -357,8 +357,11 @@ def attn_prefill_step(params, cache, x, cfg, lengths, n_valid, *, window=None):
 
     The chunk attends to [cache ++ chunk] with positional masking, so the
     rolling (windowed) cache case is exact even when the chunk overwrites
-    slots that earlier chunk queries still need (DESIGN.md §6). Returns
-    (new_cache, out (B, C, D)).
+    slots that earlier chunk queries still need (DESIGN.md §6/§10). The
+    cache buffers and the chunk's fresh KV are handed to the prefill
+    backend *separately* — the masked-XLA backend concatenates them, the
+    fused Pallas backend reads both straight from these operands and never
+    materializes the concat. Returns (new_cache, out (B, C, D)).
     """
     B, C, _ = x.shape
     span = cache["k"].shape[2]
@@ -366,38 +369,23 @@ def attn_prefill_step(params, cache, x, cfg, lengths, n_valid, *, window=None):
     positions = lengths[:, None] + idx                       # (B, C) absolute
     q, k, v = _project_qkv(params, x, cfg, positions)
     chunk_valid = idx < n_valid[:, None]
-
-    # absolute position held by each cache slot *before* this chunk's write
-    slot = jnp.arange(span)[None, :]
-    if window is not None:
-        # rolling buffer: slot j last wrote position p <= lengths-1 with
-        # p % span == j
-        last = lengths[:, None] - 1
-        cache_pos = last - ((last - slot) % span)
-    else:
-        cache_pos = jnp.broadcast_to(slot, (B, span))
-    cache_valid = (cache_pos >= 0) & (cache_pos < lengths[:, None])
-
-    kv_positions = jnp.concatenate([cache_pos, positions], axis=1)
-    kv_valid = jnp.concatenate([cache_valid, chunk_valid], axis=1)
     spec = AttentionSpec.from_config(cfg, window=window)
     if kv_quantized(cfg):
-        # quantize the chunk once; [cache ++ chunk] stays in code+scale form
+        # quantize the chunk once; cache and chunk stay in code+scale form
         # all the way into the fused-dequant prefill backend
         kq = quantize_kv(k, cfg.kv_dtype)
         vq = quantize_kv(v, cfg.kv_dtype)
-        k_all = QuantKV(jnp.concatenate([cache["k"], kq.codes], axis=2),
-                        jnp.concatenate([cache["k_scale"], kq.scale], axis=2))
-        v_all = QuantKV(jnp.concatenate([cache["v"], vq.codes], axis=2),
-                        jnp.concatenate([cache["v_scale"], vq.scale], axis=2))
+        o = dispatch_prefill(
+            spec, q, QuantKV(cache["k"], cache["k_scale"]),
+            QuantKV(cache["v"], cache["v_scale"]),
+            QuantKV(kq.codes, kq.scale), QuantKV(vq.codes, vq.scale),
+            lengths=lengths, n_valid=n_valid, rolling=window is not None,
+        )
     else:
-        k_all = jnp.concatenate([cache["k"], k], axis=2)
-        v_all = jnp.concatenate([cache["v"], v], axis=2)
-
-    o = dispatch_prefill(
-        spec, q, k_all, v_all,
-        q_positions=positions, kv_positions=kv_positions, kv_valid=kv_valid,
-    )
+        o = dispatch_prefill(
+            spec, q, cache["k"], cache["v"], k, v,
+            lengths=lengths, n_valid=n_valid, rolling=window is not None,
+        )
     out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
 
     # write the chunk; when it is longer than a rolling span, only the last

@@ -276,7 +276,6 @@ def mla_paged_prefill_step(params, pool, x, cfg, lengths, n_valid, rows,
     k_rope_chunk = apply_rope(
         k_rope_raw[:, None, :, :], positions[:, None], cfg.rope_base)[:, 0]
 
-    L = rows.shape[1]
     quant = kv_quantized(cfg)
     if quant:
         # quantize the chunk's latents once; its queries attend to the same
@@ -298,18 +297,17 @@ def mla_paged_prefill_step(params, pool, x, cfg, lengths, n_valid, rows,
             params, gather_rows(pool["kv_lat"], rows),
             gather_rows(pool["k_rope"], rows), cfg,
         )
-    k_all = jnp.concatenate([k_cache, k_chunk], axis=2)
-    v_all = jnp.concatenate([v_cache, v_chunk], axis=2)
-    hist_pos = jnp.broadcast_to(jnp.arange(L)[None, :], (B, L))
-    kv_positions = jnp.concatenate([hist_pos, positions], axis=1)
-    kv_valid = jnp.concatenate(
-        [hist_pos < lengths[:, None], chunk_valid], axis=1)
-
+    # the expanded history (gathered into logical order: row j = position
+    # j, valid iff j < lengths) and the expanded chunk go to the prefill
+    # backend separately — the contiguous dispatch convention, so the
+    # config's backend (incl. the Dq != Dv-capable Pallas prefill kernel,
+    # DESIGN.md §10) applies unchanged; the *latent* pool stays the paged,
+    # quantized object
     scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
     o = dispatch_prefill(
-        AttentionSpec.from_config(cfg, kv_dtype="fp32"), q, k_all, v_all,
-        scale=scale,
-        q_positions=positions, kv_positions=kv_positions, kv_valid=kv_valid,
+        AttentionSpec.from_config(cfg, kv_dtype="fp32"), q, k_cache,
+        v_cache, k_chunk, v_chunk, scale=scale, lengths=lengths,
+        n_valid=n_valid,
     )
     out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
 
@@ -355,7 +353,6 @@ def mla_prefill_step(params, cache, x, cfg, lengths, n_valid):
         k_rope_raw[:, None, :, :], positions[:, None], cfg.rope_base
     )[:, 0]
 
-    span = cache["kv_lat"].shape[1]
     quant = kv_quantized(cfg)
     if quant:
         latq = quantize_kv(kv_lat, cfg.kv_dtype)
@@ -374,18 +371,15 @@ def mla_prefill_step(params, cache, x, cfg, lengths, n_valid):
         k_cache, v_cache = _expand_latents(
             params, cache["kv_lat"], cache["k_rope"], cfg
         )
-    k_all = jnp.concatenate([k_cache, k_chunk], axis=2)
-    v_all = jnp.concatenate([v_cache, v_chunk], axis=2)
-    slot = jnp.broadcast_to(jnp.arange(span)[None, :], (B, span))
-    kv_positions = jnp.concatenate([slot, positions], axis=1)
+    # expanded cache + expanded chunk go to the prefill backend separately
+    # (slot j = position j, valid iff j < lengths): the masked-XLA backend
+    # concatenates, the Pallas kernel reads both segments fused (§10)
     chunk_valid = idx < n_valid[:, None]
-    kv_valid = jnp.concatenate([slot < lengths[:, None], chunk_valid], axis=1)
-
     scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
     o = dispatch_prefill(
-        AttentionSpec.from_config(cfg, kv_dtype="fp32"), q, k_all, v_all,
-        scale=scale,
-        q_positions=positions, kv_positions=kv_positions, kv_valid=kv_valid,
+        AttentionSpec.from_config(cfg, kv_dtype="fp32"), q, k_cache,
+        v_cache, k_chunk, v_chunk, scale=scale, lengths=lengths,
+        n_valid=n_valid,
     )
     out = jnp.einsum("bhsk,hkd->bsd", o, params["wo"])
 

@@ -56,11 +56,13 @@ dtypes are valid only for attention-only decoder configs — see
 ``validate_kv_dtype``.
 
 ``attention_impl`` overrides the config's backend family for the whole
-engine; ``"pallas"`` serves the decode tick on the fused paged/quantized
-flash-decode kernels (in-kernel block tables + in-register dequant,
-DESIGN.md §9). Non-obvious backend resolutions — declared fallbacks and
-the CPU interpret-mode caveat — are logged once at startup via
-``registry.resolved_backends``.
+engine; ``"pallas"`` serves *both* ticks fused — decode on the paged/
+quantized flash-decode kernels (DESIGN.md §9) and chunked prefill on the
+flash-prefill kernels (DESIGN.md §10: two-segment [cache ++ chunk] walks,
+in-kernel block tables, in-register dequant) — with zero registry
+fallbacks behind the knob. Non-obvious backend resolutions — declared
+fallbacks (none registered today) and the CPU interpret-mode caveat — are
+logged once at startup via ``registry.resolved_backends``.
 """
 from __future__ import annotations
 

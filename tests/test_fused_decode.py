@@ -41,7 +41,7 @@ from repro.models.api import init_model
 from repro.numerics.quant import QuantKV, quantize_kv
 from repro.serve.engine import ServeEngine
 
-KV_DTYPES = ("fp32", "int8", "fp8")
+from cells import KV_DTYPES  # the shared conformance axis
 
 
 def _paged_problem(seed, *, B=2, H=4, Hkv=2, D=32, Dv=32, ps=8, nblk=13,
@@ -208,19 +208,20 @@ def test_dispatch_without_tables_falls_back_to_gather():
                                atol=1e-4, rtol=1e-4)
 
 
-def test_resolved_backends_reports_prefill_fallback():
-    """The pallas family's missing prefill kernel is a *declared* fallback,
-    never silent; its decode entries are real kernels (no fallback row)."""
-    rows = {r["kind"]: r for r in resolved_backends(
-        AttentionSpec(impl="pallas"), paged=True)}
-    assert rows["paged prefill"]["fallback"]
-    assert rows["paged prefill"]["resolved"] == "gather_xla"
-    assert not rows["paged decode"]["fallback"]
-    rows_q = {r["kind"]: r for r in resolved_backends(
-        AttentionSpec(impl="pallas", kv_dtype="int8"), paged=True)}
-    assert rows_q["paged prefill"]["resolved"] == "gather_xla_q"
-    assert not rows_q["paged decode"]["fallback"]
-    assert not rows_q["decode"]["fallback"]  # pallas_q decode is real now
+def test_resolved_backends_fallback_free():
+    """Since the Pallas prefill kernels landed (ISSUE-5) every table entry
+    of the pallas family is a real kernel: resolved_backends must report
+    zero declared fallbacks, and the prefill rows must resolve to the
+    fused names themselves."""
+    for kv_dtype in ("fp32", "int8", "fp8"):
+        spec = AttentionSpec(impl="pallas", kv_dtype=kv_dtype)
+        rows = {r["kind"]: r for r in resolved_backends(spec, paged=True)}
+        suffix = "_q" if kv_dtype != "fp32" else ""
+        assert rows["prefill"]["requested"] == "pallas" + suffix
+        assert rows["paged prefill"]["requested"] == "pallas" + suffix
+        for kind, r in rows.items():
+            assert not r["fallback"], (kv_dtype, kind, r)
+            assert r["resolved"] == r["requested"], (kv_dtype, kind, r)
 
 
 # ---------------------------------------------------------------------------

@@ -20,12 +20,7 @@ from repro.models.api import (
 )
 from repro.serve.engine import ServeEngine
 
-FAMILIES = [
-    ("qwen2-0.5b", "exact", 12, 5),        # GQA + qkv bias
-    ("qwen2-0.5b", "expmul", 12, 5),       # the paper's variant
-    ("minicpm3-4b", "exact", 12, 4),       # MLA latent cache, Dq != Dv
-    ("recurrentgemma-2b", "exact", 48, 16),  # window=32 < prompt: cache rolls
-]
+from cells import MODEL_FAMILIES as FAMILIES  # the shared family table
 
 
 def _setup(arch, variant):
