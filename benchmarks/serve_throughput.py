@@ -18,6 +18,11 @@ target's win is VPU op count) at *mixed prompt lengths* and measures:
     variant/layout, asserted against per-(variant, dtype) floors
     (``STREAM_MATCH_MIN``; exact/int8 carries the >= 0.99 acceptance bar,
     the fp8/expmul floors only catch codec breakage — DESIGN.md §8)
+  * the shared-prefix scenario (DESIGN.md §11): requests sharing a 1k-token
+    system prompt served cold vs warm prefix cache, asserting warm TTFT
+    steps and per-request prefill KV HBM bytes <= 25% of cold with
+    bit-identical temp-0 streams (``prefix_cache_scenarios`` rows:
+    ``ttft_steps_warm``, ``prefix_hit_tokens``, ``prefill_flops_skipped``)
 
 Token streams are asserted identical between the contiguous and paged runs
 of each (variant, kv_dtype), so the numbers always describe equivalent
@@ -72,6 +77,106 @@ def mixed_prompts(rng, vocab, slots, prompt_len):
     the case where contiguous slot provisioning wastes the most KV)."""
     lens = [max(4, prompt_len >> i) for i in range(slots)]
     return [list(rng.integers(1, vocab, size=n)) for n in lens]
+
+
+def _ttft_steps(reqs):
+    """Per-request time-to-first-token in engine steps (admission ->
+    first sampled token, inclusive)."""
+    return [r.first_token_step - r.admit_step + 1 for r in reqs]
+
+
+def bench_prefix_scenario(params, cfg0, kv_dtype, *, n_requests, prefix_len,
+                          tail_len, max_new, chunk, slots, page_size,
+                          attention_impl=None):
+    """The shared-prefix serving scenario (ISSUE-6, DESIGN.md §11):
+    ``n_requests`` requests sharing a ``prefix_len``-token system prompt
+    with short unique tails, served cold (prefix cache off) vs warm (cache
+    on, one seed request populates the index first).
+
+    Asserted here — and CI-gated via the --smoke sweep — at a 1k shared
+    prefix:
+
+      * warm temp-0 streams are bit-identical to cold,
+      * mean warm TTFT steps <= 25% of cold,
+      * mean per-request prefill KV HBM bytes written warm <= 25% of cold
+        (the seed request is excluded from the warm means: it IS the cold
+        start that fills the cache).
+    """
+    cfg = cfg0.replace(attention_variant="expmul")
+    rng = np.random.default_rng(7)
+    prefix = list(rng.integers(1, cfg.vocab_size, size=prefix_len))
+    prompts = [prefix + list(rng.integers(1, cfg.vocab_size, size=tail_len))
+               for _ in range(n_requests)]
+    max_len = prefix_len + tail_len + max_new + 1
+    kw = {"slots": slots, "max_len": max_len, "chunk_size": chunk,
+          "kv_layout": "paged", "kv_dtype": kv_dtype,
+          "page_size": page_size, "attention_impl": attention_impl}
+
+    def serve(prefix_cache, seed_first):
+        # compile warmup on a throwaway engine (short prompts suffice: the
+        # graphs are shape-static in everything but the block-table fill)
+        warm = ServeEngine(params, cfg0.replace(attention_variant="expmul"),
+                           **kw, prefix_cache=prefix_cache)
+        warm.submit(prompts[0][:2 * chunk], 2)
+        warm.run()
+        eng = ServeEngine(params, cfg, **kw, prefix_cache=prefix_cache)
+        if seed_first:
+            # the cache-cold seed request: pays full prefill, fills the index
+            seed = eng.submit(prompts[0], max_new, rid=-1)
+            eng.run()
+        reqs = [eng.submit(p, max_new, rid=i) for i, p in enumerate(prompts)]
+        t0 = time.time()
+        eng.run()
+        dt = time.time() - t0
+        return eng, reqs, dt
+
+    cold_eng, cold_reqs, t_cold = serve(prefix_cache=False, seed_first=False)
+    warm_eng, warm_reqs, t_warm = serve(prefix_cache=True, seed_first=True)
+
+    assert [r.out for r in cold_reqs] == [r.out for r in warm_reqs], (
+        f"shared-prefix warm streams diverged from cold "
+        f"({kv_dtype}/{attention_impl})")
+
+    ttft_cold = float(np.mean(_ttft_steps(cold_reqs)))
+    ttft_warm = float(np.mean(_ttft_steps(warm_reqs)))
+    kvb_cold = float(np.mean([r.prefill_kv_bytes for r in cold_reqs]))
+    kvb_warm = float(np.mean([r.prefill_kv_bytes for r in warm_reqs]))
+    assert ttft_warm <= 0.25 * ttft_cold, (
+        f"warm TTFT {ttft_warm:.1f} steps > 25% of cold {ttft_cold:.1f} "
+        f"at a {prefix_len}-token shared prefix ({kv_dtype})")
+    assert kvb_warm <= 0.25 * kvb_cold, (
+        f"warm per-request prefill KV bytes {kvb_warm:.0f} > 25% of cold "
+        f"{kvb_cold:.0f} ({kv_dtype})")
+
+    st = warm_eng.memory_stats()
+    return {
+        "scenario": "shared_prefix",
+        "variant": "expmul",
+        "attention_impl": warm_eng.attention_impl,
+        "kv_dtype": kv_dtype,
+        "n_requests": n_requests,
+        "prefix_len": prefix_len,
+        "tail_len": tail_len,
+        "ttft_steps_cold": ttft_cold,
+        "ttft_steps_warm": ttft_warm,
+        "ttft_warm_over_cold": ttft_warm / ttft_cold,
+        "prefill_kv_bytes_cold": kvb_cold,
+        "prefill_kv_bytes_warm": kvb_warm,
+        "prefill_kv_bytes_warm_over_cold": kvb_warm / kvb_cold,
+        "decode_tok_per_s_cold": cold_eng.tokens_generated / max(t_cold, 1e-9),
+        "decode_tok_per_s_warm": warm_eng.tokens_generated / max(t_warm, 1e-9),
+        "streams_bit_identical": True,
+        "prefix_hit_tokens": st["prefix_hit_tokens"],
+        "prefill_flops_skipped": st["prefill_flops_skipped"],
+        "cache_hits": st["cache_hits"],
+        "cache_lookups": st["cache_lookups"],
+        "hit_blocks": st["hit_blocks"],
+        "cow_copies": st["cow_copies"],
+        "cached_evictions": st["cached_evictions"],
+        "kv_cached_blocks": st["kv_cached_blocks"],
+        "kv_cached_bytes": st["kv_cached_bytes"],
+        "kv_token_bytes": st["kv_token_bytes"],
+    }
 
 
 def bench_run(params, cfg0, variant, kv_layout, kv_dtype, *, slots,
@@ -235,6 +340,34 @@ def main(argv=None):
           f"{r['prefill_tok_per_s']:9.1f} tok/s, decode "
           f"{r['decode_tok_per_s']:7.1f} tok/s, streams == gather backend "
           f"(fused prefill+decode; CPU runs the kernels in interpret mode)")
+
+    # shared-prefix scenario (ISSUE-6, DESIGN.md §11): n requests sharing a
+    # 1k-token system prompt, cold vs warm prefix cache. The warm<=25%-cold
+    # TTFT and prefill-KV-bytes asserts live inside bench_prefix_scenario,
+    # so the CI smoke sweep gates them on every push; the fused (pallas)
+    # leg reruns the scenario through the flash kernels to pin the spliced
+    # block tables end-to-end.
+    sc_kw = dict(
+        n_requests=8 if args.smoke else 64,
+        prefix_len=1024, tail_len=16, max_new=args.max_new,
+        chunk=args.chunk, slots=args.slots, page_size=args.page_size)
+    results["prefix_cache_scenarios"] = []
+    scenario_impls = [(d, None) for d in kv_dtypes if d in ("fp32", "int8")]
+    scenario_impls.append((fused_dtype, "pallas"))
+    for kv_dtype, impl in scenario_impls:
+        sc = bench_prefix_scenario(params, cfg, kv_dtype,
+                                   attention_impl=impl, **sc_kw)
+        results["prefix_cache_scenarios"].append(sc)
+        print(f"  shared-prefix/{kv_dtype:5s}"
+              f"{'[pallas]' if impl else '        '}: "
+              f"TTFT {sc['ttft_steps_warm']:.1f} warm vs "
+              f"{sc['ttft_steps_cold']:.1f} cold steps "
+              f"({sc['ttft_warm_over_cold']:.1%}), prefill KV "
+              f"{sc['prefill_kv_bytes_warm']:.0f} vs "
+              f"{sc['prefill_kv_bytes_cold']:.0f} B/req "
+              f"({sc['prefill_kv_bytes_warm_over_cold']:.1%}), "
+              f"{sc['prefix_hit_tokens']} tok skipped "
+              f"({sc['prefill_flops_skipped']:.3g} FLOPs), streams == cold")
 
     def pick(variant, kv_dtype, kv_layout):
         # the fused (pallas) rerun shares this triple with its gather row:

@@ -3,10 +3,12 @@ slot pool, comparing the exact and ExpMul attention variants on identical
 requests — and, with ``--kv-dtype int8|fp8``, the quantized KV cache
 against the fp32 baseline (temp-0 exact-match rate, DESIGN.md §8).
 ``--attention-impl pallas`` serves decode on the fused Pallas kernels
-(DESIGN.md §9; interpret mode on CPU).
+(DESIGN.md §9; interpret mode on CPU). With ``--kv-layout paged`` the
+requests' shared 32-token system prefix is deduplicated by the automatic
+prefix cache (DESIGN.md §11; disable with ``--no-prefix-cache``).
 
   PYTHONPATH=src python examples/serve_batch.py [--kv-dtype int8] \
-      [--attention-impl pallas]
+      [--attention-impl pallas] [--kv-layout paged [--no-prefix-cache]]
 """
 import argparse
 import time
@@ -24,10 +26,12 @@ from repro.serve.engine import (
 
 
 def run(variant, params, cfg0, prompts, *, kv_dtype="fp32", max_new=24,
-        chunk=16, attention_impl=None):
+        chunk=16, attention_impl=None, kv_layout="contiguous",
+        prefix_cache=None):
     cfg = cfg0.replace(attention_variant=variant)
     eng = ServeEngine(params, cfg, slots=4, max_len=128, chunk_size=chunk,
-                      kv_dtype=kv_dtype, attention_impl=attention_impl)
+                      kv_dtype=kv_dtype, attention_impl=attention_impl,
+                      kv_layout=kv_layout, prefix_cache=prefix_cache)
     reqs = [eng.submit(p, max_new, rid=i) for i, p in enumerate(prompts)]
     t0 = time.time()
     eng.run()
@@ -45,7 +49,18 @@ def main():
                     choices=["ref", "flash_jnp", "pallas"],
                     help="attention backend family ('pallas': fused decode "
                          "kernels, DESIGN.md §9)")
+    ap.add_argument("--kv-layout", default="contiguous",
+                    choices=["contiguous", "paged"])
+    ap.add_argument("--prefix-cache", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="automatic shared-prefix KV caching (paged only; "
+                         "default auto — on for paged attention-only "
+                         "configs). The demo prompts share a 32-token "
+                         "system prefix, so warm admissions splice it")
     args = ap.parse_args()
+    if args.prefix_cache and args.kv_layout != "paged":
+        ap.error("--prefix-cache requires --kv-layout paged: the contiguous "
+                 "layout has no shared physical blocks to dedupe")
 
     cfg = get_config("qwen2-0.5b", smoke=True, dtype="float32",
                      param_dtype="float32")
@@ -55,15 +70,27 @@ def main():
         ap.error(str(e))  # e.g. quantized + recurrent block kinds
     params = init_model(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
-    prompts = [list(rng.integers(1, cfg.vocab_size, size=n))
-               for n in rng.integers(24, 64, size=10)]
+    # a shared "system prompt" prefix: with --kv-layout paged the prefix
+    # cache dedupes it across requests (DESIGN.md §11)
+    system = list(rng.integers(1, cfg.vocab_size, size=32))
+    prompts = [system + list(rng.integers(1, cfg.vocab_size, size=n))
+               for n in rng.integers(8, 32, size=10)]
 
-    print(f"10 requests, 4 slots, chunked prefill (C=16) + continuous "
-          f"batching, greedy decode, kv_dtype={args.kv_dtype}")
+    print(f"10 requests (32-token shared prefix), 4 slots, chunked prefill "
+          f"(C=16) + continuous batching, greedy decode, "
+          f"kv_layout={args.kv_layout}, kv_dtype={args.kv_dtype}")
     for variant in ("exact", "expmul"):
         reqs, tps, eng = run(variant, params, cfg, prompts,
                              kv_dtype=args.kv_dtype,
-                             attention_impl=args.attention_impl)
+                             attention_impl=args.attention_impl,
+                             kv_layout=args.kv_layout,
+                             prefix_cache=args.prefix_cache)
+        st = eng.memory_stats()
+        if st.get("prefix_cache"):
+            print(f"  {variant:7s}: prefix cache {st['cache_hits']}/"
+                  f"{st['cache_lookups']} hits, {st['prefix_hit_tokens']} "
+                  f"prompt tokens skipped, {st['kv_cached_blocks']} blocks "
+                  f"cached")
         line = (f"  {variant:7s}: {eng.ticks} steps (prefill "
                 f"{eng.prefill_steps} / decode {eng.decode_steps}), "
                 f"{tps:7.1f} tok/s")

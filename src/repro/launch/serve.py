@@ -3,7 +3,7 @@
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
       --requests 8 --max-new 32 --chunk 32 [--variant expmul] \
       [--kv-layout paged --page-size 16 --pool-blocks 0] [--kv-dtype int8] \
-      [--attention-impl pallas]
+      [--attention-impl pallas] [--no-prefix-cache]
 
 ``--attention-impl pallas`` selects the Pallas kernel family end-to-end —
 including the fused paged (+ quantized) flash-decode with in-kernel
@@ -54,7 +54,17 @@ def main(argv=None):
                     help="attention backend family (None = cfg default; "
                          "'pallas' enables the fused paged/quantized "
                          "flash-decode kernel, DESIGN.md §9)")
+    ap.add_argument("--prefix-cache", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="automatic shared-prefix KV caching (DESIGN.md "
+                         "§11). Default: on for paged attention-only "
+                         "configs, off otherwise; --prefix-cache with "
+                         "--kv-layout contiguous is a hard error, not a "
+                         "silent no-op")
     args = ap.parse_args(argv)
+    if args.prefix_cache and args.kv_layout != "paged":
+        ap.error("--prefix-cache requires --kv-layout paged: the contiguous "
+                 "layout has no shared physical blocks to dedupe")
 
     cfg = get_config(args.arch, smoke=args.smoke, dtype="float32",
                      param_dtype="float32", attention_variant=args.variant)
@@ -69,7 +79,8 @@ def main(argv=None):
                       page_size=args.page_size or None,
                       pool_blocks=args.pool_blocks or None,
                       kv_dtype=args.kv_dtype,
-                      attention_impl=args.attention_impl)
+                      attention_impl=args.attention_impl,
+                      prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(0)
     reqs = [
         eng.submit(
@@ -95,6 +106,12 @@ def main(argv=None):
               f"({st['kv_peak_used_bytes']}/{st['kv_reserved_bytes']} bytes "
               f"at {st['kv_token_bytes']} B/token), "
               f"{st['preemptions']} preemptions")
+        if st["prefix_cache"]:
+            print(f"  prefix cache: {st['cache_hits']}/{st['cache_lookups']} "
+                  f"hits, {st['prefix_hit_tokens']} prompt tokens skipped "
+                  f"({st['prefill_flops_skipped']:.3g} FLOPs), "
+                  f"{st['cow_copies']} COW copies, "
+                  f"{st['kv_cached_blocks']} blocks cached")
     elif args.kv_dtype != "fp32":
         print(f"  KV: {st['kv_token_bytes']} B/token "
               f"({st['kv_reserved_bytes']} bytes reserved)")

@@ -290,6 +290,35 @@ def init_paged_state(cfg: ModelConfig, slots, pool_blocks, page_size):
     }
 
 
+def copy_paged_block(state, cfg: ModelConfig, src, dst, *, page_size):
+    """Copy one physical KV page ``src`` -> ``dst`` in every attention-kind
+    pool (copy-on-write for the shared-prefix cache, DESIGN.md §11).
+
+    All attention pools — K/V, quantized codes + scale pools, MLA latents —
+    share one block-table address space, so a single (src, dst) pair moves
+    the page consistently across every leaf with a ``pool_tokens`` leading
+    row axis (axis 1 under the stacked unit axis). Recurrent-kind caches
+    are per-slot state, not paged, and are untouched.
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+
+    def copy_leaf(buf):
+        page = jax.lax.dynamic_slice_in_dim(buf, src * page_size, page_size,
+                                            axis=1)
+        return jax.lax.dynamic_update_slice_in_dim(buf, page,
+                                                   dst * page_size, axis=1)
+
+    caches = list(state["caches"])
+    for pos, kind in enumerate(_unit(cfg)):
+        if kind != "attn":
+            continue
+        caches[pos] = jax.tree.map(copy_leaf, caches[pos])
+    new_state = dict(state)
+    new_state["caches"] = tuple(caches)
+    return new_state
+
+
 def encode_for_decode(params, state, frontend_embeds, enc_lengths, cfg):
     """Run the encoder once and stash per-layer cross K/V (enc-dec serving)."""
     _, norm = make_norm(cfg.norm)

@@ -1,6 +1,7 @@
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, ServeEngine, analytic_prefill_flops
 from repro.serve.paged import BlockPool, PoolStats, blocks_for
-from repro.serve.sampling import sample_token
+from repro.serve.sampling import sample_token, sample_tokens
 
-__all__ = ["BlockPool", "PoolStats", "Request", "ServeEngine", "blocks_for",
-           "sample_token"]
+__all__ = ["BlockPool", "PoolStats", "Request", "ServeEngine",
+           "analytic_prefill_flops", "blocks_for", "sample_token",
+           "sample_tokens"]

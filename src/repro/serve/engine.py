@@ -35,6 +35,19 @@ registry.
                  streams are unchanged). Recurrent block kinds keep per-slot
                  O(1) state and bypass paging.
 
+``prefix_cache`` (paged only) turns on automatic shared-prefix KV caching
+(DESIGN.md §11): full pages are indexed by their whole token prefix as they
+are written, admission splices the longest indexed prefix of a new prompt
+into the slot's block table and advances the prefill cursor past it — the
+paged backends take arbitrary block tables, so the hit skips the prefix's
+prefill FLOPs and KV HBM writes outright, quantized layouts included. The
+resume cursor is trimmed down to the chunk grid so the remaining prefill
+chunks tile exactly as a cold run's would, keeping warm temp-0 streams
+bit-identical to cold (the ExpMul blocked softmax is tile-dependent by
+construction). Divergent writes into a shared partial tail block trigger
+copy-on-write. Default (None) = auto: on for paged attention-only configs,
+off otherwise; ``prefix_cache=True`` on an unsupported config raises.
+
 Both layouts run the same scheduler and sampling sequence, so with an
 adequately sized pool the paged engine emits bit-identical token streams to
 the contiguous one. ``chunk_size=1`` falls back to the legacy behavior:
@@ -76,6 +89,7 @@ import numpy as np
 from repro.kernels.registry import AttentionSpec, resolved_backends
 
 from repro.models.api import (
+    copy_paged_block,
     decode_step,
     decode_step_paged,
     init_decode_state,
@@ -85,7 +99,7 @@ from repro.models.api import (
 )
 from repro.numerics.quant import KV_DTYPES
 from repro.serve.paged import BlockPool, blocks_for, kv_token_bytes
-from repro.serve.sampling import sample_token
+from repro.serve.sampling import sample_tokens
 
 logger = logging.getLogger("repro.serve")
 
@@ -151,6 +165,23 @@ def validate_kv_dtype(cfg, kv_dtype: str | None = None) -> str:
     return kv_dtype
 
 
+def analytic_prefill_flops(cfg, start: int, end: int) -> int:
+    """Analytic decoder FLOPs to prefill positions [start, end) on top of a
+    resident ``start``-token prefix: 2·params per token for the linear path
+    plus 4·H·hd per (query, key) causal pair for scores + weighted sum —
+    the standard 6ND-style estimate restricted to a position range, used to
+    price what a prefix-cache hit skips (BENCH_serve.json
+    ``prefill_flops_skipped``)."""
+    n = max(0, end - start)
+    if n == 0:
+        return 0
+    flops = 2 * cfg.active_param_count() * n
+    attn_layers = sum(1 for k in cfg.pattern_for() if k == "attn")
+    span = (end * (end + 1) - start * (start + 1)) // 2
+    flops += 4 * cfg.num_heads * cfg.resolved_head_dim() * attn_layers * span
+    return int(flops)
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -165,6 +196,10 @@ class Request:
     # teacher-forced prefix: the prompt, extended with already-generated
     # tokens after a preemption (recompute-style resumption)
     prefill_toks: list = dataclasses.field(default_factory=list)
+    admit_step: int | None = None  # engine step of first admission (TTFT base)
+    prefix_hit: int = 0     # tokens skipped via prefix-cache hits (cumulative)
+    prefill_kv_bytes: int = 0  # KV bytes this request actually wrote in prefill
+    registered_blocks: int = 0  # full pages of this slot already indexed
 
 
 class ServeEngine:
@@ -174,7 +209,8 @@ class ServeEngine:
                  page_size: int | None = None,
                  pool_blocks: int | None = None,
                  kv_dtype: str | None = None,
-                 attention_impl: str | None = None):
+                 attention_impl: str | None = None,
+                 prefix_cache: bool | None = None):
         assert kv_layout in ("contiguous", "paged"), kv_layout
         self.kv_dtype = validate_kv_dtype(cfg, kv_dtype)
         cfg = cfg.replace(kv_dtype=self.kv_dtype)
@@ -191,9 +227,31 @@ class ServeEngine:
         self.max_len = max_len
         self.chunk_size = max(1, int(chunk_size))
         self.temperature = temperature
+        # base sampling key: per-request keys are folded from it each tick
+        # (see _sample_keys) so temp>0 streams are scheduling-invariant
         self.key = jax.random.PRNGKey(seed)
         self.kv_layout = kv_layout
         self.paged = kv_layout == "paged"
+        # shared-prefix caching (DESIGN.md §11): needs paged physical blocks
+        # to splice, and an attention-only pattern — recurrent per-slot state
+        # is not reconstructible from spliced KV pages, so a hit would skip
+        # prefill the recurrent layers still need
+        attn_only = set(cfg.block_pattern) == {"attn"} and not cfg.encoder_layers
+        if prefix_cache:
+            if not self.paged:
+                raise ValueError(
+                    "prefix_cache=True requires kv_layout='paged': the "
+                    "contiguous layout has no shared physical blocks to "
+                    "dedupe — serve with kv_layout='paged' or drop the flag")
+            if not attn_only:
+                rec = sorted(set(cfg.block_pattern) - {"attn"})
+                raise ValueError(
+                    f"prefix_cache=True requires an attention-only block "
+                    f"pattern, but {cfg.name!r} mixes in {rec} blocks whose "
+                    f"recurrent state cannot be reconstructed from spliced "
+                    f"KV pages; serve this arch with prefix_cache=False")
+        self.prefix_cache = (bool(prefix_cache) if prefix_cache is not None
+                             else self.paged and attn_only)
         # bytes per resident token across all attention layers (codes +
         # scale pools for quantized dtypes) — the unit of every *_bytes stat
         self.token_bytes = kv_token_bytes(cfg, self.kv_dtype)
@@ -214,8 +272,13 @@ class ServeEngine:
                 n_pool = slots * max_blocks  # fully provisioned
             self.page_size = ps
             self.pool = BlockPool(n_pool, ps, slots, max_blocks,
-                                  token_bytes=self.token_bytes)
+                                  token_bytes=self.token_bytes,
+                                  prefix_cache=self.prefix_cache)
             self.state = init_paged_state(cfg, slots, n_pool, ps)
+            self._cow_copy = jax.jit(
+                lambda state, src, dst: copy_paged_block(
+                    state, self.cfg, src, dst, page_size=ps)
+            )
             self._decode = jax.jit(
                 lambda params, state, toks, lens, bt: decode_step_paged(
                     params, state, toks, lens, bt, self.cfg, page_size=ps)
@@ -248,6 +311,8 @@ class ServeEngine:
         self.recompute_tokens = 0  # generated tokens re-prefilled after preempt
         self.tokens_generated = 0
         self.preemptions = 0
+        self.prefix_hit_tokens = 0      # prompt tokens skipped via cache hits
+        self.prefill_flops_skipped = 0  # analytic FLOPs those tokens would cost
         self._admit_seq = 0
         self.peak_active_tokens = 0   # max over ticks of sum(active lengths)
         self.peak_kv_used_tokens = 0  # max over ticks of resident KV tokens
@@ -261,28 +326,59 @@ class ServeEngine:
         self.queue.append(req)
         return req
 
-    def _first_take(self, req: Request) -> int:
-        if self.chunk_size > 1:
-            return min(self.chunk_size, len(req.prefill_toks))
-        return 1
+    def _prefix_hit(self, req: Request):
+        """Longest indexed full-page prefix of the teacher-forced tokens,
+        trimmed to the chunk grid (DESIGN.md §11).
+
+        The resume cursor must land on the same chunk boundaries a cold
+        prefill would use: every prefill starts at position 0 and absorbs
+        ``chunk_size`` tokens per tick, so all KV content — and the blocked
+        softmax tilings that shape ExpMul's float accumulation — lives on
+        one canonical grid. Aligning the cursor down keeps the remaining
+        warm chunks bit-identical to the cold run's, which is what makes
+        warm temp-0 streams equal cold ones for *every* variant. The cursor
+        is also capped at len-1 so at least one position remains to produce
+        the first sampled token's logits. Kept blocks are trimmed to those
+        covering the cursor — a block straddling the cursor stays spliced
+        (its head rows are live context) and triggers COW on first write.
+
+        Returns (blocks_to_splice, cursor_tokens).
+        """
+        blocks = self.pool.match_prefix(req.prefill_toks)
+        if not blocks:
+            return [], 0
+        grid = self.chunk_size if self.chunk_size > 1 else 1
+        cursor = min(len(blocks) * self.page_size, len(req.prefill_toks) - 1)
+        cursor = cursor // grid * grid
+        if cursor <= 0:
+            return [], 0
+        return blocks[:blocks_for(cursor, self.page_size)], cursor
 
     def _admit(self):
         for s in range(self.slots):
             if self.requests[s] is None and self.queue:
-                if self.paged and not self.pool.can_fit(
-                        s, self._first_take(self.queue[0])):
+                req = self.queue[0]
+                hit_blocks, cursor = ([], 0)
+                if self.prefix_cache:
+                    hit_blocks, cursor = self._prefix_hit(req)
+                take = (min(self.chunk_size, len(req.prefill_toks) - cursor)
+                        if self.chunk_size > 1 else 1)
+                if self.paged and not self.pool.can_admit(
+                        hit_blocks, cursor + take):
                     if self.pool.used_blocks == 0 and not any(
                             r is not None for r in self.requests):
-                        # an empty pool can't hold even the first chunk:
+                        # an idle pool can't hold even the first chunk:
                         # waiting will never help — fail like _reserve does
+                        # (a hit never hurts admissibility: spliced blocks
+                        # cover at least the capacity they pin)
                         raise RuntimeError(
-                            f"KV pool too small: request {self.queue[0].rid} "
-                            f"needs {self._first_take(self.queue[0])} tokens "
+                            f"KV pool too small: request {req.rid} "
+                            f"needs {cursor + take} tokens "
                             f"for its first chunk but the whole pool holds "
                             f"{self.pool.pool_blocks * self.page_size}; "
                             f"raise pool_blocks")
                     break  # pool too tight right now; retry as blocks free
-                req = self.queue.pop(0)
+                self.queue.pop(0)
                 if req.admit_order < 0:
                     # seniority is assigned once and survives preemption:
                     # a requeued request must outrank later arrivals, or two
@@ -291,9 +387,19 @@ class ServeEngine:
                     req.admit_order = self._admit_seq
                     self._admit_seq += 1
                 self.requests[s] = req
-                self.lengths[s] = 0
-                self.cur_tok[s] = req.prefill_toks[0]
-                # NOTE: slot state is logically reset via lengths=0 (the
+                if req.admit_step is None:
+                    req.admit_step = self.ticks
+                if hit_blocks:
+                    self.pool.splice(s, hit_blocks)
+                    req.prefix_hit += cursor
+                    self.prefix_hit_tokens += cursor
+                    self.prefill_flops_skipped += analytic_prefill_flops(
+                        self.cfg, 0, cursor)
+                req.registered_blocks = len(hit_blocks)
+                req.pos = cursor
+                self.lengths[s] = cursor
+                self.cur_tok[s] = req.prefill_toks[cursor]
+                # NOTE: slot state is logically reset via lengths (the
                 # attention mask hides stale cache rows); recurrent-state
                 # archs need a true reset, handled by zeroing below.
                 self._reset_slot_state(s)
@@ -325,12 +431,22 @@ class ServeEngine:
             req.done = True
             self.requests[s] = None
             if self.paged:
+                if self.prefix_cache:
+                    # index any full pages completed this tick before the
+                    # release: the freed blocks land in the cached tier and
+                    # a future identical prompt can splice them
+                    self._register_full_pages(s, req)
                 self.pool.free_slot(s)
 
     # -- paged capacity management ------------------------------------------
     def _preempt(self, s):
         """Evict slot s and requeue its request for recompute-resumption."""
         req = self.requests[s]
+        if self.prefix_cache:
+            # index the victim's completed pages first: they land in the
+            # cached tier, so unless the preemptor reclaims them too the
+            # victim resumes via a prefix hit instead of recompute
+            self._register_full_pages(s, req)
         self.pool.evict_slot(s)
         self.requests[s] = None
         self.lengths[s] = 0
@@ -357,13 +473,49 @@ class ServeEngine:
             return min(self.chunk_size, len(req.prefill_toks) - req.pos)
         return 1
 
+    def _cow_shared_tail(self, s):
+        """Copy-on-write before this tick's writes to slot ``s`` (§11).
+
+        Writes are append-only at ``lengths[s]``; the only block that can be
+        both shared and write-targeted is the one straddling a mid-page
+        write cursor — a spliced hit block whose tail rows this slot is
+        about to overwrite (fresh blocks are private by construction, and a
+        block this slot registered is fully written, never written again).
+        The pool hands out a private replacement id and this method performs
+        the device page copy; the original keeps its index entry and any
+        other references."""
+        off = int(self.lengths[s])
+        if off % self.page_size == 0:
+            return
+        idx = off // self.page_size
+        if not self.pool.is_shared(int(self.pool.tables[s, idx])):
+            return
+        while True:
+            pair = self.pool.cow_block(s, idx)
+            if pair is not None:
+                break
+            victim = self._pick_victim(exclude=s)
+            if victim is None:
+                raise RuntimeError(
+                    f"KV pool exhausted: slot {s} needs a copy-on-write "
+                    f"block (pool={self.pool.pool_blocks}) with no one "
+                    f"left to evict; raise pool_blocks")
+            self._preempt(victim)
+        src, dst = pair
+        self.state = self._cow_copy(self.state, src, dst)
+
     def _reserve(self, active):
         """Grow block tables to cover this tick's writes, oldest request
-        first; preempt youngest-first when the pool is exhausted. Returns
-        the surviving active slots."""
+        first; preempt youngest-first when the pool is exhausted (the pool
+        itself reclaims cached-LRU blocks before any preemption — §11
+        eviction ordering). Returns the surviving active slots."""
         for s in sorted(active, key=lambda s: self.requests[s].admit_order):
             if self.requests[s] is None:
                 continue  # preempted by an older request's reservation
+            if self.prefix_cache:
+                self._cow_shared_tail(s)
+            if self.requests[s] is None:
+                continue
             target = int(self.lengths[s]) + self._take_for(s)
             while not self.pool.alloc(s, target):
                 victim = self._pick_victim(exclude=s)
@@ -376,9 +528,46 @@ class ServeEngine:
                 self._preempt(victim)
         return [s for s in range(self.slots) if self.requests[s] is not None]
 
+    def _register_full_pages(self, s, req: Request):
+        """Index newly completed full pages of slot ``s`` for future prefix
+        hits (§11). Page i's chain key is (physical id of page i-1, its ps
+        tokens), so the key transitively covers the whole prefix — which is
+        exactly what the KV content of the page depends on. The logical
+        token at position p is always (prompt + out)[p]: after a preemption
+        ``prefill_toks`` is prompt + out-so-far and sampling keeps appending
+        to ``out``, so the concatenation stays the written sequence."""
+        ps = self.page_size
+        full = int(self.lengths[s]) // ps
+        if full <= req.registered_blocks:
+            return
+        seq = req.prompt + req.out
+        for i in range(req.registered_blocks, full):
+            parent = int(self.pool.tables[s, i - 1]) if i else -1
+            self.pool.register_block(int(self.pool.tables[s, i]), parent,
+                                     seq[i * ps:(i + 1) * ps])
+        req.registered_blocks = full
+
     # -- engine steps -------------------------------------------------------
     def _block_tables(self):
         return jnp.asarray(self.pool.tables)
+
+    def _sample_keys(self):
+        """Per-slot sampling keys: fold (admission seniority, #generated)
+        into the engine seed, so a request's temp>0 stream is a function of
+        its own history — invariant to tick interleaving, and hence to
+        prefix-cache hits or preemptions changing the schedule. At temp 0
+        sampling is argmax and the keys are inert."""
+        keys = [
+            self.key if req is None else jax.random.fold_in(
+                jax.random.fold_in(self.key, req.admit_order), len(req.out))
+            for req in self.requests
+        ]
+        return jnp.stack(keys)
+
+    def _register_active_pages(self):
+        for s in range(self.slots):
+            if self.requests[s] is not None:
+                self._register_full_pages(s, self.requests[s])
 
     def _prefill_tick(self, active):
         """One chunked step: prefilling slots absorb up to chunk_size prompt
@@ -400,8 +589,8 @@ class ServeEngine:
         if self.paged:
             args += (self._block_tables(),)
         logits, self.state = self._prefill(*args)
-        self.key, sk = jax.random.split(self.key)
-        nxt = np.asarray(sample_token(sk, logits, temperature=self.temperature))
+        nxt = np.asarray(sample_tokens(self._sample_keys(), logits,
+                                       temperature=self.temperature))
         self.ticks += 1
         self.prefill_steps += 1
         for s in active:
@@ -413,6 +602,7 @@ class ServeEngine:
                 recompute = max(0, min(req.pos + take, len(req.prefill_toks))
                                 - max(req.pos, n_prompt))
                 req.pos += take
+                req.prefill_kv_bytes += take * self.token_bytes
                 self.prompt_tokens += take - recompute
                 self.recompute_tokens += recompute
                 if req.pos < len(req.prefill_toks):
@@ -427,8 +617,8 @@ class ServeEngine:
         if self.paged:
             args += (self._block_tables(),)
         logits, self.state = self._decode(*args)
-        self.key, sk = jax.random.split(self.key)
-        nxt = np.asarray(sample_token(sk, logits, temperature=self.temperature))
+        nxt = np.asarray(sample_tokens(self._sample_keys(), logits,
+                                       temperature=self.temperature))
         self.ticks += 1
         self.decode_steps += 1
         for s in active:
@@ -440,6 +630,7 @@ class ServeEngine:
                     self.prompt_tokens += 1
                 else:
                     self.recompute_tokens += 1
+                req.prefill_kv_bytes += self.token_bytes
             self.lengths[s] += 1
             req.pos = max(req.pos, int(self.lengths[s]))
             pos = int(self.lengths[s])
@@ -472,6 +663,10 @@ class ServeEngine:
             self._prefill_tick(active)
         else:
             self._decode_tick(active)
+        if self.prefix_cache:
+            # index pages completed by this tick's writes (finished slots
+            # already registered theirs in _finish_or_continue)
+            self._register_active_pages()
         self._track_memory(
             [s for s in range(self.slots) if self.requests[s] is not None])
         return True
@@ -515,4 +710,23 @@ class ServeEngine:
             st["pool_blocks"] = self.pool.pool_blocks
             st["evictions"] = self.pool.stats.evictions
             st["alloc_failures"] = self.pool.stats.alloc_failures
+            # cache residency split (§11): used = referenced by a live slot,
+            # cached = unreferenced-but-retained prefix pages, free = blank.
+            # used_bytes above deliberately exclude the cached tier.
+            st["prefix_cache"] = self.prefix_cache
+            st["kv_used_blocks"] = int(self.pool.used_blocks)
+            st["kv_cached_blocks"] = int(self.pool.cached_block_count)
+            st["kv_free_blocks"] = int(self.pool.free_block_count)
+            st["kv_cached_tokens"] = int(self.pool.cached_block_count
+                                         * self.page_size)
+            st["kv_cached_bytes"] = int(self.pool.cached_bytes)
+            if self.prefix_cache:
+                ps = self.pool.stats
+                st["cache_lookups"] = ps.cache_lookups
+                st["cache_hits"] = ps.cache_hits
+                st["hit_blocks"] = ps.hit_blocks
+                st["cow_copies"] = ps.cow_copies
+                st["cached_evictions"] = ps.cached_evictions
+                st["prefix_hit_tokens"] = int(self.prefix_hit_tokens)
+                st["prefill_flops_skipped"] = int(self.prefill_flops_skipped)
         return st

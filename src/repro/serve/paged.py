@@ -1,5 +1,5 @@
 """Host-side paged KV-cache management: block pool + per-sequence block
-tables (DESIGN.md §7).
+tables (DESIGN.md §7), with automatic shared-prefix caching (§11).
 
 This is the vLLM-style memory manager for the serving engine. Device caches
 are flat pools of ``pool_blocks * page_size`` physical token rows (see
@@ -12,18 +12,44 @@ in numpy/python on the host:
   * one block table per engine slot, shape ``(slots, max_blocks_per_seq)``,
     holding physical block ids in logical order. Every layer of the model
     stores the same logical positions, so one table per sequence serves all
-    layers (they index their own pools with the same ids).
+    layers (they index their own pools with the same ids);
+  * with ``prefix_cache=True``, a per-block reference count plus a
+    radix-trie-equivalent *prefix index*: every full page a sequence
+    completes is registered under the key ``(parent_block_id, page_tokens)``
+    — the parent chain makes the key cover the block's whole prefix, so a
+    flat dict walk from the root is exactly a trie descent, with physical
+    block ids as the trie nodes (DESIGN.md §11). Because KV content is a
+    deterministic function of the token prefix, an index match means the
+    resident block holds bit-identical KV to what a fresh prefill would
+    write, and a new sequence can *share* the physical block (refcount++)
+    instead of recomputing and re-storing it.
+
+Block states with prefix caching on: **used** (refcount ≥ 1: some slot's
+table references the block), **cached** (refcount == 0 but the block is
+indexed — content retained for future hits), **free** (on the free list).
+Without prefix caching, refcount 0 goes straight to the free list and the
+pool behaves exactly as before §11.
 
 Unallocated table entries hold the sentinel ``pool_blocks`` (one past the
 last block): every physical row derived from a sentinel is out of range, so
 device gathers read zeros (masked anyway) and device scatters drop — a
 freed slot can never corrupt the pool.
 
-Eviction is whole-sequence: when ``alloc`` cannot cover a reservation the
-engine preempts a victim (youngest first), frees all its blocks here, and
-requeues the request for recompute-style resumption (its prompt + tokens
-generated so far become the new teacher-forced prefix). At temperature 0
-recomputation is deterministic, so preemption never changes token streams.
+Eviction is tiered (§11 ordering): ``alloc`` first takes the free list,
+then reclaims **cached** blocks LRU-first (leaf-preferred, so a reclaimed
+parent doesn't orphan reachable children), and only when both tiers are
+exhausted does the engine preempt a *live* victim (youngest first), free
+its blocks here, and requeue the request for recompute-style resumption
+(its prompt + tokens generated so far become the new teacher-forced
+prefix). At temperature 0 recomputation is deterministic — and a prefix
+hit splices bit-identical KV — so neither preemption nor caching ever
+changes token streams.
+
+Copy-on-write: a slot that must *write* into a shared or indexed block
+(only possible at the partial tail of a prefix hit, e.g. an identical
+prompt resubmitted — the last hit page straddles the recompute cursor)
+first gets a private copy via ``cow_block``; the original keeps its index
+entry and its other references untouched.
 """
 from __future__ import annotations
 
@@ -73,16 +99,36 @@ def kv_token_bytes(cfg, kv_dtype: str | None = None) -> int:
 
 @dataclasses.dataclass
 class PoolStats:
-    """Cumulative allocator statistics (exported into BENCH_serve.json)."""
+    """Allocator statistics (exported into BENCH_serve.json).
+
+    The ``used_blocks`` / ``cached_blocks`` / ``free_blocks`` triple is a
+    live residency snapshot (refreshed on every pool mutation) splitting
+    the pool into referenced, retained-for-reuse, and free blocks — so
+    ``ServeEngine.memory_stats()`` reports cache residency instead of
+    lumping cached blocks into used bytes (DESIGN.md §11). The rest are
+    cumulative counters.
+    """
     allocs: int = 0            # physical blocks handed out
-    frees: int = 0             # physical blocks returned
+    frees: int = 0             # physical blocks whose refcount dropped to 0
     evictions: int = 0         # slots whose blocks were freed by preemption
     alloc_failures: int = 0    # reservations that did not fit
-    peak_used_blocks: int = 0  # high-water mark of live blocks
+    peak_used_blocks: int = 0  # high-water mark of referenced blocks
+    # residency snapshot: used (refcount >= 1) / cached (refcount == 0 but
+    # indexed, retained) / free — always sums to pool_blocks
+    used_blocks: int = 0
+    cached_blocks: int = 0
+    free_blocks: int = 0
+    # prefix cache (DESIGN.md §11)
+    cache_lookups: int = 0     # match_prefix calls
+    cache_hits: int = 0        # lookups matching >= 1 block
+    hit_blocks: int = 0        # blocks spliced from the index into tables
+    cached_evictions: int = 0  # cached blocks reclaimed under pressure
+    cow_copies: int = 0        # copy-on-write page copies
 
 
 class BlockPool:
-    """Fixed pool of KV-cache blocks with per-slot block tables.
+    """Fixed pool of KV-cache blocks with per-slot block tables and an
+    optional shared-prefix index (DESIGN.md §7/§11).
 
     ``sentinel`` (== pool_blocks) marks unallocated table entries. All
     methods are O(blocks touched); nothing here is jit-traced — the tables
@@ -90,7 +136,8 @@ class BlockPool:
     """
 
     def __init__(self, pool_blocks: int, page_size: int, slots: int,
-                 max_blocks_per_seq: int, token_bytes: int = 0):
+                 max_blocks_per_seq: int, token_bytes: int = 0,
+                 prefix_cache: bool = False):
         assert pool_blocks > 0 and page_size > 0
         self.pool_blocks = pool_blocks
         self.page_size = page_size
@@ -100,6 +147,7 @@ class BlockPool:
         # the parallel scale pool for quantized kv_dtypes (kv_token_bytes);
         # 0 = unknown, byte properties report 0
         self.token_bytes = token_bytes
+        self.prefix_cache = prefix_cache
         self.sentinel = pool_blocks
         # LIFO free list: lowest ids at the end so fresh allocations are
         # deterministic (block 0 first) — handy for tests and reproducibility
@@ -107,12 +155,30 @@ class BlockPool:
         self.tables = np.full((slots, max_blocks_per_seq), self.sentinel,
                               np.int32)
         self.n_blocks = np.zeros((slots,), np.int32)  # allocated per slot
+        self.refcount = np.zeros((pool_blocks,), np.int32)
+        # prefix index (the flat-dict radix trie, §11): key is
+        # (parent_block_id, tuple(page tokens)) — parent -1 at the root —
+        # so a key transitively pins the block's whole token prefix
+        self._index: dict = {}        # key -> block id
+        self._block_key: dict = {}    # block id -> key (indexed blocks only)
+        self._children: dict = {}     # block id -> set of indexed child ids
+        self._cached: dict = {}       # block id -> LRU tick (refcount == 0)
+        self._tick = 0                # monotonic LRU clock
         self.stats = PoolStats()
+        self._sync_residency()
 
     # -- capacity queries ---------------------------------------------------
     @property
     def used_blocks(self) -> int:
-        return self.pool_blocks - len(self.free_blocks)
+        """Blocks referenced by at least one slot's table (excludes the
+        cached tier — those are reclaimable, DESIGN.md §11)."""
+        return (self.pool_blocks - len(self.free_blocks)
+                - len(self._cached))
+
+    @property
+    def cached_block_count(self) -> int:
+        """Unreferenced-but-retained blocks (prefix cache residency)."""
+        return len(self._cached)
 
     @property
     def free_block_count(self) -> int:
@@ -120,8 +186,13 @@ class BlockPool:
 
     @property
     def used_bytes(self) -> int:
-        """Real bytes resident in live blocks (codes + scale pools)."""
+        """Real bytes resident in referenced blocks (codes + scale pools)."""
         return self.used_blocks * self.page_size * self.token_bytes
+
+    @property
+    def cached_bytes(self) -> int:
+        """Real bytes retained in the cached tier."""
+        return self.cached_block_count * self.page_size * self.token_bytes
 
     @property
     def reserved_bytes(self) -> int:
@@ -131,44 +202,216 @@ class BlockPool:
     def utilization(self) -> float:
         return self.used_blocks / self.pool_blocks
 
+    def _sync_residency(self):
+        self.stats.used_blocks = self.used_blocks
+        self.stats.cached_blocks = len(self._cached)
+        self.stats.free_blocks = len(self.free_blocks)
+
+    def _available(self) -> int:
+        """Blocks obtainable without preempting anyone: free + cached."""
+        return len(self.free_blocks) + len(self._cached)
+
     def can_fit(self, slot: int, n_tokens: int) -> bool:
         need = blocks_for(n_tokens, self.page_size) - int(self.n_blocks[slot])
-        return need <= len(self.free_blocks)
+        return need <= self._available()
+
+    def can_admit(self, hit_blocks: list, n_tokens: int) -> bool:
+        """Would a fresh slot holding ``hit_blocks`` spliced from the index
+        fit ``n_tokens``? Hit blocks sitting in the cached tier stop being
+        reclaimable the moment they are spliced, so they don't count as
+        available."""
+        need = blocks_for(n_tokens, self.page_size) - len(hit_blocks)
+        avail = self._available() - sum(1 for b in hit_blocks
+                                        if b in self._cached)
+        return need <= avail
+
+    # -- refcount plumbing --------------------------------------------------
+    def _incref(self, b: int):
+        self.refcount[b] += 1
+        self._cached.pop(b, None)   # cached -> used
+
+    def _decref(self, b: int):
+        self.refcount[b] -= 1
+        assert self.refcount[b] >= 0, b
+        if self.refcount[b] > 0:
+            return 0
+        # last reference gone: retain if indexed (cached tier), else free
+        if self.prefix_cache and b in self._block_key:
+            self._cached[b] = self._tick
+            self._tick += 1
+        else:
+            self.free_blocks.append(b)
+        self.stats.frees += 1
+        return 1
+
+    def is_shared(self, b: int) -> bool:
+        """True when writing into ``b`` needs copy-on-write first: another
+        table references it, or the prefix index maps to its content."""
+        return int(self.refcount[b]) > 1 or b in self._block_key
+
+    # -- prefix index (DESIGN.md §11) ---------------------------------------
+    def _deindex(self, b: int):
+        """Drop ``b`` and its whole indexed subtree from the prefix index.
+
+        Descendants must go too: their keys name ``b`` as parent, and if
+        ``b``'s storage is reused for different content a later walk could
+        match a stale child against the wrong prefix. Unreferenced
+        descendants have no reason to stay resident once unindexed — they
+        move straight to the free list."""
+        key = self._block_key.pop(b, None)
+        if key is None:
+            return
+        del self._index[key]
+        parent = key[0]
+        if parent >= 0 and parent in self._children:
+            self._children[parent].discard(b)
+        for child in list(self._children.pop(b, ())):
+            self._deindex(child)
+            if child in self._cached:
+                del self._cached[child]
+                self.free_blocks.append(child)
+
+    def register_block(self, b: int, parent: int, tokens) -> None:
+        """Index a freshly completed full page for future prefix hits.
+
+        No-op when: caching is off; ``b`` is already indexed (a spliced hit
+        block); the parent is not indexed (the chain to the root is broken,
+        so the entry would be unreachable — and dangerous if the parent id
+        is ever reused); or the key already maps to another block (two
+        slots prefilled the same prefix concurrently — the first
+        registration stays canonical, the duplicate block remains private).
+        """
+        if not self.prefix_cache or b in self._block_key:
+            return
+        if parent >= 0 and parent not in self._block_key:
+            return
+        key = (parent, tuple(int(t) for t in tokens))
+        if key in self._index:
+            return
+        self._index[key] = b
+        self._block_key[b] = key
+        if parent >= 0:
+            self._children.setdefault(parent, set()).add(b)
+
+    def match_prefix(self, tokens) -> list:
+        """Longest chain of indexed full pages covering a prefix of
+        ``tokens`` — the radix-trie descent, one dict lookup per page.
+        Matched blocks may be cached *or* live (shared with a running
+        sequence); cached matches get their LRU refreshed."""
+        self.stats.cache_lookups += 1
+        ps = self.page_size
+        out = []
+        parent = -1
+        for i in range(len(tokens) // ps):
+            key = (parent, tuple(int(t) for t in tokens[i * ps:(i + 1) * ps]))
+            b = self._index.get(key)
+            if b is None:
+                break
+            out.append(b)
+            parent = b
+        if out:
+            self.stats.cache_hits += 1
+            for b in out:
+                if b in self._cached:
+                    self._cached[b] = self._tick
+                    self._tick += 1
+        return out
+
+    def splice(self, slot: int, blocks: list) -> None:
+        """Seed a fresh slot's table with shared blocks from a prefix hit
+        (refcount++ each; cached blocks return to the used tier)."""
+        assert int(self.n_blocks[slot]) == 0, "splice targets a fresh slot"
+        for i, b in enumerate(blocks):
+            self.tables[slot, i] = b
+            self._incref(b)
+        self.n_blocks[slot] = len(blocks)
+        self.stats.hit_blocks += len(blocks)
+        self.stats.peak_used_blocks = max(self.stats.peak_used_blocks,
+                                          self.used_blocks)
+        self._sync_residency()
+
+    def _reclaim(self, k: int) -> int:
+        """Move up to ``k`` cached blocks to the free list, LRU first among
+        leaves (indexed children keep their parents pinned until the leaves
+        go — evicting a parent would orphan a still-reachable subtree).
+        Returns the number of blocks actually freed (cascades included)."""
+        before = len(self.free_blocks)
+        while len(self.free_blocks) - before < k and self._cached:
+            leaves = [b for b in self._cached if not self._children.get(b)]
+            pick_from = leaves or list(self._cached)
+            victim = min(pick_from, key=lambda b: self._cached[b])
+            del self._cached[victim]
+            self._deindex(victim)
+            self.free_blocks.append(victim)
+            self.stats.cached_evictions += 1
+        return len(self.free_blocks) - before
 
     # -- alloc / free -------------------------------------------------------
     def alloc(self, slot: int, n_tokens: int) -> bool:
         """Grow ``slot``'s table to cover ``n_tokens`` logical tokens.
 
-        All-or-nothing: returns False (allocating nothing) when the free
-        list cannot cover the growth, so a failed reservation leaves the
-        pool untouched and the engine can pick a victim to evict.
-        """
+        All-or-nothing: returns False (allocating nothing) when free +
+        reclaimable-cached blocks cannot cover the growth, so a failed
+        reservation leaves the pool untouched and the engine can pick a
+        *live* victim to preempt (cached-LRU reclaim always comes first,
+        §11 eviction ordering)."""
         want = blocks_for(n_tokens, self.page_size)
         assert want <= self.max_blocks_per_seq, (n_tokens, want)
         have = int(self.n_blocks[slot])
         need = want - have
         if need <= 0:
             return True
-        if need > len(self.free_blocks):
+        if need > self._available():
             self.stats.alloc_failures += 1
             return False
+        if need > len(self.free_blocks):
+            self._reclaim(need - len(self.free_blocks))
         for i in range(have, want):
-            self.tables[slot, i] = self.free_blocks.pop()
+            b = self.free_blocks.pop()
+            self.tables[slot, i] = b
+            self.refcount[b] = 1
         self.n_blocks[slot] = want
         self.stats.allocs += need
         self.stats.peak_used_blocks = max(self.stats.peak_used_blocks,
                                           self.used_blocks)
+        self._sync_residency()
         return True
 
+    def cow_block(self, slot: int, idx: int):
+        """Copy-on-write: give ``slot`` a private replacement for the shared
+        block at table position ``idx`` before it writes there (§11).
+
+        Returns ``(src, dst)`` physical ids — the *caller* owns the device
+        page copy — or None when no block is obtainable (the engine then
+        preempts a victim and retries). The original keeps its index entry
+        and its other references; if this slot held its last reference it
+        simply returns to the cached tier, content intact."""
+        src = int(self.tables[slot, idx])
+        if not self.free_blocks:
+            self._reclaim(1)
+        if not self.free_blocks:
+            self.stats.alloc_failures += 1
+            return None
+        dst = self.free_blocks.pop()
+        self.tables[slot, idx] = dst
+        self.refcount[dst] = 1
+        self._decref(src)
+        self.stats.cow_copies += 1
+        self.stats.peak_used_blocks = max(self.stats.peak_used_blocks,
+                                          self.used_blocks)
+        self._sync_residency()
+        return src, dst
+
     def free_slot(self, slot: int) -> int:
-        """Return every block of ``slot`` to the free list; reset its table
-        to sentinels. Returns the number of blocks freed."""
+        """Release every block of ``slot`` (refcount--; last holder sends a
+        block to the cached tier if indexed, else to the free list); reset
+        its table to sentinels. Returns the number of blocks released."""
         n = int(self.n_blocks[slot])
         for i in range(n):
-            self.free_blocks.append(int(self.tables[slot, i]))
+            self._decref(int(self.tables[slot, i]))
         self.tables[slot, :n] = self.sentinel
         self.n_blocks[slot] = 0
-        self.stats.frees += n
+        self._sync_residency()
         return n
 
     def evict_slot(self, slot: int) -> int:

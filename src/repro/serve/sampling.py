@@ -5,13 +5,35 @@ import jax
 import jax.numpy as jnp
 
 
-def sample_token(key, logits, *, temperature: float = 0.0, top_k: int = 0):
-    """logits: (B, V) -> (B,) int32."""
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+def _shape_logits(logits, temperature: float, top_k: int):
     logits = logits / temperature
     if top_k:
         vals, _ = jax.lax.top_k(logits, top_k)
         cutoff = vals[:, -1:]
         logits = jnp.where(logits < cutoff, -1e30, logits)
+    return logits
+
+
+def sample_token(key, logits, *, temperature: float = 0.0, top_k: int = 0):
+    """logits: (B, V) -> (B,) int32. One key drives the whole batch."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = _shape_logits(logits, temperature, top_k)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_tokens(keys, logits, *, temperature: float = 0.0, top_k: int = 0):
+    """Per-row keyed sampling: keys (B, ...) PRNG keys, logits (B, V) ->
+    (B,) int32.
+
+    Row i is sampled with keys[i] alone, so a row's draw is independent of
+    which other rows share the batch — the serving engine derives each key
+    from (request seniority, tokens generated) to make temp>0 streams
+    scheduling-invariant (batch composition, preemptions, and prefix-cache
+    hits cannot change a request's stream). At temp 0 this is argmax and
+    the keys are unused.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = _shape_logits(logits, temperature, top_k)
+    return jax.vmap(jax.random.categorical)(keys, logits).astype(jnp.int32)

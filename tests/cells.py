@@ -57,6 +57,18 @@ FAMILY_SHAPES = {
     "mla": dict(H=4, Hkv=4, D=24, Dv=16, window=None),
 }
 
+# the prefix-cache oracle matrix (ISSUE-6): warm (cache-hit) temp-0 streams
+# must be *bit-identical* to cold ones for every variant x kv_dtype the
+# paged engine serves with caching on — expmul's chunk-grid-aligned resume
+# cursor is exactly what makes this hold (DESIGN.md §11). fp8 rides the
+# same code paths as int8 (codes + scale pools share the block tables), so
+# the committed matrix covers {fp32, int8} and the bench covers the rest.
+PREFIX_CACHE_CELLS = tuple(
+    (variant, kv_dtype)
+    for variant in VARIANTS
+    for kv_dtype in ("fp32", "int8")
+)
+
 # model-level config families (arch, variant, prompt_len, chunk) shared by
 # the end-to-end prefill/serving tests (previously copy-pasted there)
 MODEL_FAMILIES = [

@@ -1,0 +1,342 @@
+"""Automatic shared-prefix KV caching (DESIGN.md §11, ISSUE-6).
+
+Two layers of coverage:
+
+* Host-side ``BlockPool`` semantics: the radix-equivalent flat-dict index,
+  per-block refcounts (double-free regression), the used/cached/free
+  residency split, cached-LRU eviction ordering, and copy-on-write
+  bookkeeping — all pure Python, no device work.
+* Engine-level oracles: warm (cache-hit) temp-0 streams must be
+  bit-identical to cold ones across the ``PREFIX_CACHE_CELLS`` matrix —
+  the chunk-grid-aligned resume cursor is what makes this hold for the
+  tile-dependent ExpMul softmax — plus COW on tail divergence, preemption
+  safety for shared blocks, scheduling-invariant temp>0 sampling, and the
+  loud rejections (contiguous layout, recurrent block patterns).
+"""
+import jax
+import numpy as np
+import pytest
+
+from cells import PREFIX_CACHE_CELLS
+from repro.configs import get_config
+from repro.models.api import init_model
+from repro.serve.engine import ServeEngine
+from repro.serve.paged import BlockPool
+
+
+def _setup(variant="exact"):
+    cfg = get_config("qwen2-0.5b", smoke=True, dtype="float32",
+                     param_dtype="float32", attention_variant=variant)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _prompts(shared_len=40, tail=7, n=4, seed=0, vocab=200):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(1, vocab, shared_len).tolist()
+    return [shared + rng.integers(1, vocab, tail).tolist() for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# host-side pool: index, refcounts, residency tiers
+# ---------------------------------------------------------------------------
+def _pool(**kw):
+    kw.setdefault("pool_blocks", 8)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("slots", 3)
+    kw.setdefault("max_blocks_per_seq", 6)
+    kw.setdefault("prefix_cache", True)
+    return BlockPool(**kw)
+
+
+def test_register_match_and_splice():
+    pool = _pool()
+    assert pool.alloc(0, 8)                       # slot 0: 2 blocks
+    b0, b1 = int(pool.tables[0, 0]), int(pool.tables[0, 1])
+    pool.register_block(b0, -1, [1, 2, 3, 4])
+    pool.register_block(b1, b0, [5, 6, 7, 8])
+    # chain walk: full prefix hits both pages, divergence stops the walk
+    assert pool.match_prefix([1, 2, 3, 4, 5, 6, 7, 8, 9]) == [b0, b1]
+    assert pool.match_prefix([1, 2, 3, 4, 9, 9, 9, 9]) == [b0]
+    assert pool.match_prefix([9, 2, 3, 4]) == []
+    # splice shares the physical blocks; nothing new is allocated
+    free_before = pool.free_block_count
+    pool.splice(1, [b0, b1])
+    assert pool.free_block_count == free_before
+    assert int(pool.refcount[b0]) == 2 and int(pool.refcount[b1]) == 2
+    assert pool.stats.hit_blocks == 2
+
+
+def test_refcounted_free_is_not_double_free():
+    """The double-free regression: two slots share blocks; freeing both
+    slots must release each block exactly once, and a block freed by its
+    last holder must not reappear twice in the free list."""
+    pool = _pool(prefix_cache=False)  # unindexed: frees go to the free list
+    assert pool.alloc(0, 8)
+    blocks = [int(b) for b in pool.tables[0, :2]]
+    # manual share (the engine does this via splice after a hit)
+    pool.splice(1, blocks)
+    assert pool.free_slot(0) == 2
+    # still referenced by slot 1: nothing returned to the free list
+    assert all(b not in pool.free_blocks for b in blocks)
+    assert pool.used_blocks == 2
+    assert pool.free_slot(1) == 2
+    assert pool.used_blocks == 0
+    assert sorted(pool.free_blocks) == list(range(pool.pool_blocks))
+    assert len(set(pool.free_blocks)) == pool.pool_blocks  # no duplicates
+
+
+def test_cached_tier_and_residency_split():
+    pool = _pool()
+    assert pool.alloc(0, 8)
+    b0, b1 = int(pool.tables[0, 0]), int(pool.tables[0, 1])
+    pool.register_block(b0, -1, [1, 2, 3, 4])
+    pool.register_block(b1, b0, [5, 6, 7, 8])
+    pool.free_slot(0)
+    # indexed blocks are retained (cached), not freed
+    assert pool.used_blocks == 0 and pool.cached_block_count == 2
+    assert pool.free_block_count == pool.pool_blocks - 2
+    assert pool.stats.used_blocks == 0 and pool.stats.cached_blocks == 2
+    assert pool.stats.free_blocks == pool.pool_blocks - 2
+    # a hit pulls them back into the used tier
+    hit = pool.match_prefix([1, 2, 3, 4, 5, 6, 7, 8])
+    pool.splice(1, hit)
+    assert pool.used_blocks == 2 and pool.cached_block_count == 0
+
+
+def test_cached_lru_evicted_before_any_allocation_fails():
+    """Eviction ordering (§11): unreferenced cached blocks are reclaimed
+    LRU-first to satisfy allocations — the engine only preempts live
+    sequences when even that is not enough."""
+    pool = _pool(pool_blocks=4, page_size=4)
+    assert pool.alloc(0, 8)
+    b0, b1 = int(pool.tables[0, 0]), int(pool.tables[0, 1])
+    pool.register_block(b0, -1, [1, 2, 3, 4])
+    pool.register_block(b1, b0, [5, 6, 7, 8])
+    pool.free_slot(0)                    # both cached
+    assert pool.cached_block_count == 2
+    # 4 blocks needed, 2 free + 2 cached: the cached pair must be reclaimed
+    assert pool.alloc(1, 16)
+    assert pool.cached_block_count == 0
+    assert pool.stats.cached_evictions >= 1
+    # and the reclaimed blocks are no longer matchable
+    assert pool.match_prefix([1, 2, 3, 4]) == []
+
+
+def test_deindex_cascades_to_descendants():
+    """Evicting an indexed parent must de-index its whole subtree: a child
+    key names the parent's physical id, which is about to be reused for
+    different content — a stale child entry would corrupt later walks."""
+    pool = _pool(pool_blocks=4, page_size=4)
+    assert pool.alloc(0, 16)             # whole pool
+    ids = [int(b) for b in pool.tables[0, :4]]
+    toks = list(range(1, 17))
+    parent = -1
+    for i, b in enumerate(ids):
+        pool.register_block(b, parent, toks[i * 4:(i + 1) * 4])
+        parent = b
+    pool.free_slot(0)                    # all 4 cached
+    assert pool.alloc(1, 4)              # reclaims exactly one (LRU leaf)
+    # whatever was evicted, every surviving index entry must still chain to
+    # the root: a full re-walk finds a (possibly shorter) strict prefix
+    hit = pool.match_prefix(toks)
+    assert len(hit) <= 3
+    assert hit == ids[:len(hit)]
+
+
+def test_cow_block_keeps_original_for_other_holders():
+    pool = _pool()
+    assert pool.alloc(0, 4)
+    b0 = int(pool.tables[0, 0])
+    pool.register_block(b0, -1, [1, 2, 3, 4])
+    pool.splice(1, [b0])
+    assert pool.is_shared(b0)
+    src, dst = pool.cow_block(1, 0)
+    assert src == b0 and dst != b0
+    assert int(pool.tables[1, 0]) == dst and int(pool.tables[0, 0]) == b0
+    assert int(pool.refcount[b0]) == 1 and int(pool.refcount[dst]) == 1
+    assert pool.stats.cow_copies == 1
+    # the original stays canonical in the index
+    assert pool.match_prefix([1, 2, 3, 4]) == [b0]
+
+
+# ---------------------------------------------------------------------------
+# engine-level oracles
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("variant,kv_dtype", PREFIX_CACHE_CELLS,
+                         ids=lambda p: str(p))
+def test_warm_streams_bit_identical_to_cold(variant, kv_dtype):
+    """The headline contract: serving the same shared-prefix workload with
+    the cache warm (prefix pages resident from an earlier request) must
+    produce *bit-identical* temp-0 streams to a cold engine — for the exact
+    variant, the paper's ExpMul variant, and the quantized KV cache."""
+    params, cfg = _setup(variant)
+    prompts = _prompts()
+
+    def run(warm):
+        eng = ServeEngine(params, cfg, slots=2, max_len=96, chunk_size=8,
+                          kv_layout="paged", page_size=4, kv_dtype=kv_dtype)
+        assert eng.prefix_cache  # auto-on for paged attention-only configs
+        if warm:
+            eng.submit(prompts[0][:43], 4)
+            eng.run()
+        reqs = [eng.submit(p, 6, rid=i) for i, p in enumerate(prompts)]
+        eng.run()
+        return eng, [r.out for r in reqs]
+
+    cold_eng, cold = run(False)
+    warm_eng, warm = run(True)
+    assert cold == warm
+    ws = warm_eng.memory_stats()
+    assert ws["cache_hits"] >= len(prompts)  # every request hit the prefix
+    assert ws["prefix_hit_tokens"] >= len(prompts) * 40
+    assert ws["prefill_flops_skipped"] > 0
+    # the warm engine did strictly less prefill work
+    assert warm_eng.prompt_tokens - 43 - 4 < cold_eng.prompt_tokens
+
+
+def test_cow_on_tail_divergence_with_live_donor():
+    """Two prompts share a prefix that ends mid-page on the chunk grid: the
+    second request splices the straddling block while the first still
+    references it, so its divergent writes must copy-on-write — and both
+    streams must match a cache-off run."""
+    params, cfg = _setup()
+    rng = np.random.default_rng(1)
+    shared = rng.integers(1, 200, 24).tolist()   # page 8, chunk 5
+    pA = shared + rng.integers(1, 200, 6).tolist()
+    pB = shared + rng.integers(1, 200, 6).tolist()
+
+    def run(prefix_cache):
+        eng = ServeEngine(params, cfg, slots=2, max_len=96, chunk_size=5,
+                          kv_layout="paged", page_size=8,
+                          prefix_cache=prefix_cache)
+        outs = []
+        for p in (pA, pB, pA):           # third = identical resubmission
+            r = eng.submit(p, 5)
+            eng.run()
+            outs.append(r.out)
+        return eng, outs
+
+    off_eng, off = run(False)
+    on_eng, on = run(True)
+    assert off == on
+    st = on_eng.memory_stats()
+    assert st["cow_copies"] >= 1         # the straddling page was copied
+    assert st["cache_hits"] >= 2
+    assert off_eng.memory_stats()["kv_cached_blocks"] == 0
+
+
+def test_preemption_never_frees_blocks_shared_with_live_slot():
+    """A preempted victim whose table contains spliced shared blocks must
+    only drop its own references: the surviving slot's stream (attending
+    through those same physical blocks) must be unchanged, and every
+    request must still finish with the right tokens."""
+    params, cfg = _setup()
+    rng = np.random.default_rng(2)
+    shared = rng.integers(1, 200, 16).tolist()
+    prompts = [shared + rng.integers(1, 200, n).tolist()
+               for n in (5, 9, 7, 11, 6)]
+
+    ref = ServeEngine(params, cfg, slots=3, max_len=64, chunk_size=8)
+    rr = [ref.submit(p, 6, rid=i) for i, p in enumerate(prompts)]
+    ref.run()
+
+    # pool too small for three full sequences -> preemptions with shared
+    # prefix blocks in the victims' tables
+    tight = ServeEngine(params, cfg, slots=3, max_len=64, chunk_size=8,
+                        kv_layout="paged", page_size=4, pool_blocks=14)
+    tr = [tight.submit(p, 6, rid=i) for i, p in enumerate(prompts)]
+    tight.run()
+
+    assert all(r.done for r in tr)
+    assert [r.out for r in rr] == [r.out for r in tr]
+    # every block accounted for at the end: nothing leaked, nothing
+    # double-freed (free + cached must cover the whole pool)
+    pool = tight.pool
+    assert pool.used_blocks == 0
+    assert pool.free_block_count + pool.cached_block_count == pool.pool_blocks
+    assert (pool.refcount == 0).all()
+
+
+def test_full_prompt_resubmission_hits_and_matches():
+    """Resubmitting a finished prompt verbatim must splice its cached pages
+    (cursor capped at len-1 keeps one position to produce logits) and
+    reproduce the original stream exactly."""
+    params, cfg = _setup("expmul")
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, 200, 32).tolist()   # multiple of page & chunk
+
+    eng = ServeEngine(params, cfg, slots=2, max_len=96, chunk_size=8,
+                      kv_layout="paged", page_size=8)
+    first = eng.submit(prompt, 6)
+    eng.run()
+    again = eng.submit(prompt, 6)
+    eng.run()
+    assert first.out == again.out
+    assert again.prefix_hit >= 24        # cursor = align(31) = 24 of 32
+    st = eng.memory_stats()
+    assert st["cache_hits"] >= 1
+
+
+def test_temperature_sampling_is_scheduling_invariant():
+    """temp>0 streams are a function of (request seniority, tokens emitted)
+    only: the same workload served through differently sized slot pools —
+    different batch compositions and tick interleavings — must sample the
+    same tokens per request."""
+    params, cfg = _setup()
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, 200, n).tolist() for n in (9, 14, 6, 11)]
+
+    def run(slots):
+        eng = ServeEngine(params, cfg, slots=slots, max_len=64, chunk_size=8,
+                          temperature=0.8, seed=7)
+        reqs = [eng.submit(p, 6, rid=i) for i, p in enumerate(prompts)]
+        eng.run()
+        return [r.out for r in reqs]
+
+    assert run(4) == run(2) == run(1)
+
+
+def test_prefix_cache_rejections_and_auto_default():
+    params, cfg = _setup()
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(params, cfg, kv_layout="contiguous", prefix_cache=True)
+    # recurrent block kinds cannot splice per-slot state
+    rcfg = get_config("recurrentgemma-2b", smoke=True, dtype="float32",
+                      param_dtype="float32")
+    rparams = init_model(jax.random.PRNGKey(0), rcfg)
+    with pytest.raises(ValueError, match="attention-only"):
+        ServeEngine(rparams, rcfg, kv_layout="paged", prefix_cache=True)
+    # auto default: on for paged attention-only, off for recurrent/contiguous
+    assert ServeEngine(params, cfg, kv_layout="paged").prefix_cache
+    assert not ServeEngine(params, cfg).prefix_cache
+    assert not ServeEngine(rparams, rcfg, kv_layout="paged").prefix_cache
+    # and off stays off: no lookups, no cached blocks
+    eng = ServeEngine(params, cfg, kv_layout="paged", prefix_cache=False)
+    eng.submit([1, 2, 3, 4, 5, 6, 7, 8], 4)
+    eng.run()
+    st = eng.memory_stats()
+    assert not st["prefix_cache"] and st["kv_cached_blocks"] == 0
+
+
+def test_warm_streams_bit_identical_fused_pallas():
+    """The fused Pallas serving path (interpret mode on CPU) takes the same
+    spliced block tables: a small warm-vs-cold check keeps the kernel
+    family honest end-to-end."""
+    params, cfg = _setup("expmul")
+    rng = np.random.default_rng(6)
+    shared = rng.integers(1, 200, 16).tolist()
+    prompts = [shared + rng.integers(1, 200, 4).tolist() for _ in range(2)]
+
+    def run(warm):
+        eng = ServeEngine(params, cfg, slots=2, max_len=48, chunk_size=8,
+                          kv_layout="paged", page_size=8,
+                          attention_impl="pallas")
+        if warm:
+            eng.submit(shared + [3], 2)
+            eng.run()
+        reqs = [eng.submit(p, 3, rid=i) for i, p in enumerate(prompts)]
+        eng.run()
+        return [r.out for r in reqs]
+
+    assert run(False) == run(True)
