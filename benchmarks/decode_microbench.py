@@ -51,50 +51,13 @@ from repro.kernels.registry import (
     dispatch_paged_decode,
     resolved_backends,
 )
-from repro.numerics.quant import QuantKV, kv_code_bytes, quantize_kv
-
-SCALE_BYTES = 4   # per-row float32 scale (numerics/quant.py contract)
-F32 = 4
-TABLE_BYTES = 4   # int32 block-table entry, amortized over page_size tokens
+# the analytic cost model lives in repro.kernels.costs since DESIGN.md §12
+# (shared with the dispatch counters and the engine's executed-cost
+# ledger); re-exported here so existing callers keep their import path
+from repro.kernels.costs import analytic_bytes_per_ctx_token  # noqa: F401
+from repro.numerics.quant import QuantKV, quantize_kv
 
 INT8_PAGED_MAX_RATIO = 0.40  # ISSUE-4 acceptance bar (fused/gather, analytic)
-
-
-def analytic_bytes_per_ctx_token(layout, kv_dtype, path, *, Hkv, D, Dv,
-                                 page_size):
-    """Designed HBM bytes touched per context token for one decode step.
-
-    Counted per logical token of resident history, summed over the K and V
-    rows of all ``Hkv`` heads:
-
-      * cache read — what the attention math must load: codes (1 B/elt) +
-        scale rows for quantized dtypes, 4 B/elt for fp32.
-      * gather overhead — the gather datapaths materialize a contiguous
-        fp32 copy of the (dequantized) history before attending, paying a
-        full write + read of that copy on top of the cache read. The
-        contiguous-fp32 gather ("xla") reads the cache in place (masked
-        one-pass softmax, no copy), so its overhead is zero — fused vs
-        gather only diverges where a copy exists (every paged cell and,
-        in time if not bytes, the dequant cells).
-      * paged adds the block-table read, amortized per token.
-
-    q/o traffic is context-independent and excluded (identical across
-    paths).
-    """
-    elt = kv_code_bytes(kv_dtype) if kv_dtype != "fp32" else F32
-    cache_read = Hkv * (D + Dv) * elt
-    if kv_dtype != "fp32":
-        cache_read += Hkv * 2 * SCALE_BYTES
-    copy = 2 * Hkv * (D + Dv) * F32  # write + read of the fp32 copy
-    b = cache_read
-    if layout == "paged":
-        b += TABLE_BYTES / page_size
-        if path == "gather":
-            b += copy
-    elif path == "gather" and kv_dtype != "fp32":
-        # contiguous quantized gather: dequantized fp32 copy of the cache
-        b += copy
-    return b
 
 
 def _xla_cost_bytes(fn, *args):

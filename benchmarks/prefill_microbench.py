@@ -52,55 +52,13 @@ from repro.kernels.registry import (
     dispatch_prefill,
     resolved_backends,
 )
-from repro.numerics.quant import QuantKV, kv_code_bytes, quantize_kv
-
-SCALE_BYTES = 4   # per-row float32 scale (numerics/quant.py contract)
-F32 = 4
-TABLE_BYTES = 4   # int32 block-table entry, amortized over page_size tokens
+# the analytic cost model lives in repro.kernels.costs since DESIGN.md §12
+# (shared with the dispatch counters and the engine's executed-cost
+# ledger); re-exported here so existing callers keep their import path
+from repro.kernels.costs import analytic_bytes_per_chunk_token  # noqa: F401
+from repro.numerics.quant import QuantKV, quantize_kv
 
 INT8_PAGED_MAX_RATIO = 0.50  # ISSUE-5 acceptance bar (fused/gather, analytic)
-
-
-def analytic_bytes_per_chunk_token(layout, kv_dtype, path, *, Hkv, D, Dv,
-                                   ctx, chunk, page_size):
-    """Designed HBM bytes touched per *chunk token* for one prefill step.
-
-    A chunk of ``chunk`` fresh tokens attends over ``ctx`` resident
-    history tokens plus itself; per KV head a token row costs
-    ``(D + Dv) * elt`` bytes (+ 2 scale rows when quantized):
-
-      * history read — what the attention math must load once per chunk:
-        codes (1 B/elt) + scale rows for quantized dtypes, 4 B/elt fp32.
-      * gather overhead — the gather datapaths materialize a contiguous
-        dequantized fp32 copy of the history (and of the quantized chunk)
-        before attending, paying a full write + read of that copy on top
-        of the raw read. The contiguous-fp32 gather reads the cache in
-        place (masked one-pass softmax, no copy), so its overhead is
-        zero — fused vs gather only diverges where a copy exists (every
-        paged cell and every quantized cell).
-      * the chunk's own fresh KV is read once by both paths; paged adds
-        the block-table read.
-
-    Everything is divided by ``chunk``: the steady-state per-prompt-token
-    HBM cost of prefilling at this chunk size. q/output traffic is
-    identical across paths and excluded.
-    """
-    elt = kv_code_bytes(kv_dtype) if kv_dtype != "fp32" else F32
-    row = Hkv * (D + Dv) * elt
-    if kv_dtype != "fp32":
-        row += Hkv * 2 * SCALE_BYTES
-    row_f32 = Hkv * (D + Dv) * F32
-    hist = ctx * row
-    chunk_bytes = chunk * row
-    b = hist + chunk_bytes
-    copy = 2 * (ctx + chunk) * row_f32      # write + read of the fp32 copy
-    if layout == "paged":
-        b += TABLE_BYTES * (-(-ctx // page_size))
-        if path == "gather":
-            b += copy
-    elif path == "gather" and kv_dtype != "fp32":
-        b += copy
-    return b / chunk
 
 
 def _xla_cost_bytes(fn, *args):

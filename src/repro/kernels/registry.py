@@ -165,6 +165,28 @@ _DECODE_IMPLS: dict[str, object] = {}
 _PAGED_PREFILL_IMPLS: dict[str, object] = {}
 _PAGED_DECODE_IMPLS: dict[str, object] = {}
 
+# observability hook (DESIGN.md §12): when set, every dispatch_* call
+# reports (kind, spec, operand geometry) before running. The hook lives
+# here — the kernels layer exposes the slot, ``repro.serve.metrics``
+# installs into it — so kernels never import the serving stack. Dispatch
+# runs at Python call time: 1:1 with attention calls for eager callers,
+# once per trace under jax.jit (the engine's executed-cost ledger covers
+# per-step attribution). ``None`` (the default) costs one predicate check.
+_DISPATCH_SINK = None
+
+
+def set_dispatch_sink(sink) -> None:
+    """Install (or with ``None`` remove) the global dispatch observer —
+    see ``repro.serve.metrics.install_dispatch_counters``."""
+    global _DISPATCH_SINK
+    _DISPATCH_SINK = sink
+
+
+def _shape(x):
+    """Static operand shape: QuantKV operands report their codes' shape
+    (same token/head geometry as the raw array they replace)."""
+    return getattr(x, "codes", x).shape
+
 # (table kind, registered name) -> name of the implementation whose math the
 # entry actually runs. Populated by ``register_*(..., fallback_of=...)`` and
 # surfaced by ``resolved_backends`` — a requested backend never silently
@@ -257,6 +279,11 @@ def dispatch_attention(spec: AttentionSpec, q, k, v, *, causal=True,
                        scale=None):
     """Full-sequence attention. q: (B,H,Sq,D); k/v: (B,Hkv,Sk,·)."""
     fn = _lookup(_ATTENTION_IMPLS, spec.resolved_impl(), "full-sequence")
+    if _DISPATCH_SINK is not None:
+        qs, ks, vs = _shape(q), _shape(k), _shape(v)
+        _DISPATCH_SINK("full", spec, batch=qs[0], heads=qs[1],
+                       heads_kv=ks[1], d_qk=ks[-1], d_v=vs[-1],
+                       kv_tokens=ks[2], q_tokens=qs[2])
     return fn(q, k, v, spec=spec, causal=causal, scale=scale)
 
 
@@ -281,6 +308,11 @@ def dispatch_prefill(spec: AttentionSpec, q, k_cache, v_cache, k_chunk,
     concatenation (pallas — DESIGN.md §10).
     """
     fn = _lookup(_PREFILL_IMPLS, spec.resolved_prefill_impl(), "prefill")
+    if _DISPATCH_SINK is not None:
+        qs, ks, vs = _shape(q), _shape(k_cache), _shape(v_cache)
+        _DISPATCH_SINK("prefill", spec, batch=qs[0], heads=qs[1],
+                       heads_kv=ks[1], d_qk=ks[-1], d_v=vs[-1],
+                       kv_tokens=ks[2], q_tokens=qs[2])
     return fn(q, k_cache, v_cache, k_chunk, v_chunk, spec=spec, scale=scale,
               lengths=lengths, n_valid=n_valid, rolling=rolling)
 
@@ -289,6 +321,11 @@ def dispatch_decode(spec: AttentionSpec, q, k_cache, v_cache, lengths, *,
                     scale=None):
     """Single-token decode. q: (B,H,D); caches: (B,Hkv,S,·); lengths: (B,)."""
     fn = _lookup(_DECODE_IMPLS, spec.resolved_decode_impl(), "decode")
+    if _DISPATCH_SINK is not None:
+        qs, ks, vs = _shape(q), _shape(k_cache), _shape(v_cache)
+        _DISPATCH_SINK("decode", spec, batch=qs[0], heads=qs[1],
+                       heads_kv=ks[1], d_qk=ks[-1], d_v=vs[-1],
+                       kv_tokens=ks[2], q_tokens=1)
     return fn(q, k_cache, v_cache, lengths, spec=spec, scale=scale)
 
 
@@ -308,6 +345,12 @@ def dispatch_paged_prefill(spec: AttentionSpec, q, k_chunk, v_chunk, k_pool,
     """
     fn = _lookup(_PAGED_PREFILL_IMPLS, spec.resolved_paged_impl(),
                  "paged prefill")
+    if _DISPATCH_SINK is not None:
+        qs, ks, vs = _shape(q), _shape(k_pool), _shape(v_pool)
+        _DISPATCH_SINK("paged_prefill", spec, batch=qs[0], heads=qs[1],
+                       heads_kv=ks[1], d_qk=ks[-1], d_v=vs[-1],
+                       kv_tokens=_shape(rows)[1], q_tokens=qs[2],
+                       page_size=page_size)
     return fn(q, k_chunk, v_chunk, k_pool, v_pool, rows, spec=spec,
               scale=scale, q_positions=q_positions, chunk_valid=chunk_valid,
               lengths=lengths, block_tables=block_tables,
@@ -328,5 +371,11 @@ def dispatch_paged_decode(spec: AttentionSpec, q, k_pool, v_pool, rows,
     """
     fn = _lookup(_PAGED_DECODE_IMPLS, spec.resolved_paged_impl(),
                  "paged decode")
+    if _DISPATCH_SINK is not None:
+        qs, ks, vs = _shape(q), _shape(k_pool), _shape(v_pool)
+        _DISPATCH_SINK("paged_decode", spec, batch=qs[0], heads=qs[1],
+                       heads_kv=ks[1], d_qk=ks[-1], d_v=vs[-1],
+                       kv_tokens=_shape(rows)[1], q_tokens=1,
+                       page_size=page_size)
     return fn(q, k_pool, v_pool, rows, lengths, spec=spec, scale=scale,
               block_tables=block_tables, page_size=page_size)

@@ -8,10 +8,17 @@
 ``--attention-impl pallas`` selects the Pallas kernel family end-to-end —
 including the fused paged (+ quantized) flash-decode with in-kernel
 block-table indexing (DESIGN.md §9; interpret mode on CPU).
+
+Observability (DESIGN.md §12): ``--metrics-json PATH`` dumps the full
+``metrics_snapshot()`` after the run; ``--trace-out PATH`` turns on span
+tracing and writes a Chrome-trace/Perfetto JSON of the request-lifecycle
+timeline (load in ui.perfetto.dev); ``--log-metrics-every N`` prints a
+one-line progress summary every N engine steps while serving.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -61,6 +68,15 @@ def main(argv=None):
                          "configs, off otherwise; --prefix-cache with "
                          "--kv-layout contiguous is a hard error, not a "
                          "silent no-op")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write ServeEngine.metrics_snapshot() as JSON "
+                         "here after the run (DESIGN.md §12)")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable span tracing and write the Chrome-trace/"
+                         "Perfetto JSON timeline here")
+    ap.add_argument("--log-metrics-every", type=int, default=0,
+                    help="print a metrics line every N engine steps "
+                         "(0 = off)")
     args = ap.parse_args(argv)
     if args.prefix_cache and args.kv_layout != "paged":
         ap.error("--prefix-cache requires --kv-layout paged: the contiguous "
@@ -80,7 +96,8 @@ def main(argv=None):
                       pool_blocks=args.pool_blocks or None,
                       kv_dtype=args.kv_dtype,
                       attention_impl=args.attention_impl,
-                      prefix_cache=args.prefix_cache)
+                      prefix_cache=args.prefix_cache,
+                      trace=bool(args.trace_out))
     rng = np.random.default_rng(0)
     reqs = [
         eng.submit(
@@ -91,7 +108,19 @@ def main(argv=None):
         for i in range(args.requests)
     ]
     t0 = time.time()
-    eng.run()
+    if args.log_metrics_every > 0:
+        # manual tick loop so progress can be reported mid-run
+        every = args.log_metrics_every
+        while eng.tick() or eng.queue:
+            if eng.ticks % every == 0:
+                snap = eng.metrics_snapshot()
+                print(f"  [step {eng.ticks}] generated="
+                      f"{eng.tokens_generated} queue={len(eng.queue)} "
+                      f"preempt={eng.preemptions} "
+                      f"ttft_p50={snap['ttft_steps_p50']:.0f} "
+                      f"tpot_p50={snap['tpot_steps_p50']:.0f} steps")
+    else:
+        eng.run()
     dt = time.time() - t0
     print(f"variant={args.variant} impl={eng.attention_impl} "
           f"kv={args.kv_layout}/{args.kv_dtype} "
@@ -115,6 +144,19 @@ def main(argv=None):
     elif args.kv_dtype != "fp32":
         print(f"  KV: {st['kv_token_bytes']} B/token "
               f"({st['kv_reserved_bytes']} bytes reserved)")
+    snap = eng.metrics_snapshot()
+    print(f"  TTFT p50/p99 {snap['ttft_steps_p50']:.0f}/"
+          f"{snap['ttft_steps_p99']:.0f} steps, TPOT p50/p99 "
+          f"{snap['tpot_steps_p50']:.0f}/{snap['tpot_steps_p99']:.0f} steps")
+    if args.metrics_json:
+        with open(args.metrics_json, "w") as f:
+            json.dump(snap, f, indent=2)
+            f.write("\n")
+        print(f"  wrote {args.metrics_json}")
+    if args.trace_out:
+        eng.metrics.write_chrome_trace(args.trace_out)
+        print(f"  wrote {args.trace_out} "
+              f"({len(eng.metrics.events)} trace events)")
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt[:4]={r.prompt[:4]} -> out[:8]={r.out[:8]}")
     return reqs

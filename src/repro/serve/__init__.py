@@ -1,7 +1,15 @@
 from repro.serve.engine import Request, ServeEngine, analytic_prefill_flops
+from repro.serve.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    install_dispatch_counters,
+)
 from repro.serve.paged import BlockPool, PoolStats, blocks_for
 from repro.serve.sampling import sample_token, sample_tokens
 
-__all__ = ["BlockPool", "PoolStats", "Request", "ServeEngine",
-           "analytic_prefill_flops", "blocks_for", "sample_token",
-           "sample_tokens"]
+__all__ = ["BlockPool", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "PoolStats", "Request", "ServeEngine",
+           "analytic_prefill_flops", "blocks_for",
+           "install_dispatch_counters", "sample_token", "sample_tokens"]

@@ -81,11 +81,19 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.costs import (
+    analytic_attention_flops,
+    analytic_bytes_per_chunk_token,
+    analytic_bytes_per_ctx_token,
+    attn_kv_geometry,
+    impl_path,
+)
 from repro.kernels.registry import AttentionSpec, resolved_backends
 
 from repro.models.api import (
@@ -98,6 +106,13 @@ from repro.models.api import (
     prefill_paged,
 )
 from repro.numerics.quant import KV_DTYPES
+from repro.serve.metrics import (
+    MS_BUCKETS,
+    PID_ENGINE,
+    PID_REQUESTS,
+    MetricsRegistry,
+    install_dispatch_counters,
+)
 from repro.serve.paged import BlockPool, blocks_for, kv_token_bytes
 from repro.serve.sampling import sample_tokens
 
@@ -197,6 +212,9 @@ class Request:
     # tokens after a preemption (recompute-style resumption)
     prefill_toks: list = dataclasses.field(default_factory=list)
     admit_step: int | None = None  # engine step of first admission (TTFT base)
+    admit_time: float | None = None   # host wall clock of first admission
+    last_token_step: int | None = None  # engine step of latest sample (TPOT)
+    last_token_time: float | None = None
     prefix_hit: int = 0     # tokens skipped via prefix-cache hits (cumulative)
     prefill_kv_bytes: int = 0  # KV bytes this request actually wrote in prefill
     registered_blocks: int = 0  # full pages of this slot already indexed
@@ -210,8 +228,16 @@ class ServeEngine:
                  pool_blocks: int | None = None,
                  kv_dtype: str | None = None,
                  attention_impl: str | None = None,
-                 prefix_cache: bool | None = None):
+                 prefix_cache: bool | None = None,
+                 metrics: MetricsRegistry | None = None,
+                 trace: bool = False):
         assert kv_layout in ("contiguous", "paged"), kv_layout
+        # observability (DESIGN.md §12): the registry is the single owner
+        # of every serving counter — memory_stats()/PoolStats are views.
+        # ``trace`` gates span/event recording only; counters, histograms
+        # and metrics_snapshot() are always live.
+        self.metrics = metrics if metrics is not None else MetricsRegistry(
+            trace=trace)
         self.kv_dtype = validate_kv_dtype(cfg, kv_dtype)
         cfg = cfg.replace(kv_dtype=self.kv_dtype)
         if attention_impl is not None:
@@ -273,7 +299,8 @@ class ServeEngine:
             self.page_size = ps
             self.pool = BlockPool(n_pool, ps, slots, max_blocks,
                                   token_bytes=self.token_bytes,
-                                  prefix_cache=self.prefix_cache)
+                                  prefix_cache=self.prefix_cache,
+                                  metrics=self.metrics)
             self.state = init_paged_state(cfg, slots, n_pool, ps)
             self._cow_copy = jax.jit(
                 lambda state, src, dst: copy_paged_block(
@@ -304,18 +331,66 @@ class ServeEngine:
         self.cur_tok = np.zeros((slots,), np.int32)
         self.requests: list[Request | None] = [None] * slots
         self.queue: list[Request] = []
-        self.ticks = 0            # total engine steps (prefill + decode)
-        self.prefill_steps = 0
-        self.decode_steps = 0
-        self.prompt_tokens = 0    # prompt tokens absorbed via chunked prefill
-        self.recompute_tokens = 0  # generated tokens re-prefilled after preempt
-        self.tokens_generated = 0
-        self.preemptions = 0
-        self.prefix_hit_tokens = 0      # prompt tokens skipped via cache hits
-        self.prefill_flops_skipped = 0  # analytic FLOPs those tokens would cost
         self._admit_seq = 0
-        self.peak_active_tokens = 0   # max over ticks of sum(active lengths)
-        self.peak_kv_used_tokens = 0  # max over ticks of resident KV tokens
+        # lifecycle counters live in the metrics registry (single-owner
+        # contract, §12); the legacy attribute names are properties below
+        m = self.metrics
+        self._c_ticks = m.counter("serve_steps_total")
+        self._c_prefill_steps = m.counter("serve_prefill_steps_total")
+        self._c_decode_steps = m.counter("serve_decode_steps_total")
+        self._c_prompt_tokens = m.counter("serve_prompt_tokens_total")
+        self._c_recompute = m.counter("serve_recompute_tokens_total")
+        self._c_generated = m.counter("serve_tokens_generated_total")
+        self._c_preemptions = m.counter("serve_preemptions_total")
+        self._c_hit_tokens = m.counter("serve_prefix_hit_tokens_total")
+        self._c_flops_skipped = m.counter("serve_prefill_flops_skipped_total")
+        self._c_submitted = m.counter("serve_requests_submitted_total")
+        self._c_finished = m.counter("serve_requests_finished_total")
+        self._g_peak_active = m.gauge("serve_peak_active_tokens")
+        self._g_peak_kv = m.gauge("serve_peak_kv_used_tokens")
+        self._g_queue = m.gauge("serve_queue_depth")
+        # TTFT/TPOT: engine steps are the exact scheduling-level signal on
+        # the CPU proxy; the ms twins are host wall clock (no device syncs
+        # beyond the per-tick host transfer the engine already performs)
+        self._h_ttft_steps = m.histogram("serve_ttft_steps")
+        self._h_tpot_steps = m.histogram("serve_tpot_steps")
+        self._h_ttft_ms = m.histogram("serve_ttft_ms", buckets=MS_BUCKETS)
+        self._h_tpot_ms = m.histogram("serve_tpot_ms", buckets=MS_BUCKETS)
+        self._now = 0.0  # host timestamp taken once per tick
+        m.name_track(PID_ENGINE, 0, "engine steps")
+        # executed-cost ledger (§12): each engine step is priced through
+        # the analytic helpers at its *actual* host-side lengths, keyed by
+        # the spec the engine dispatches — the live fused-vs-gather byte
+        # ledger. (The registry-level dispatch counters are installed
+        # globally: 1:1 for eager callers, per-trace under jit.)
+        spec = AttentionSpec.from_config(cfg)
+        self._geom = g = attn_kv_geometry(cfg)
+        layout = "paged" if self.paged else "contiguous"
+        self._exec = {}
+        for kind, impl in (
+                ("prefill", spec.resolved_paged_impl() if self.paged
+                 else spec.resolved_prefill_impl()),
+                ("decode", spec.resolved_paged_impl() if self.paged
+                 else spec.resolved_decode_impl())):
+            labels = {"kind": kind, "impl": impl, "variant": spec.variant,
+                      "kv_dtype": self.kv_dtype, "layout": layout}
+            self._exec[kind] = {
+                "impl": impl,
+                "path": impl_path(impl),
+                "calls": m.counter("attention_exec_calls_total", **labels),
+                "steps": m.counter("attention_exec_steps_total", **labels),
+                "tokens": m.counter("attention_exec_kv_tokens_total",
+                                    **labels),
+                "bytes": m.counter("attention_exec_analytic_bytes",
+                                   **labels),
+                "flops": m.counter("attention_exec_analytic_flops",
+                                   **labels),
+            }
+        self._decode_bytes_per_ctx_token = analytic_bytes_per_ctx_token(
+            layout, self.kv_dtype, self._exec["decode"]["path"],
+            Hkv=g["Hkv"], D=g["D"], Dv=g["Dv"],
+            page_size=self.page_size or 1)
+        install_dispatch_counters(self.metrics)
 
     # -- request lifecycle --------------------------------------------------
     def submit(self, prompt, max_new: int, rid: int | None = None) -> Request:
@@ -324,7 +399,61 @@ class ServeEngine:
         req = Request(rid if rid is not None else len(self.queue), prompt,
                       max_new, prefill_toks=list(prompt))
         self.queue.append(req)
+        self._c_submitted.inc()
+        self._g_queue.set(len(self.queue))
         return req
+
+    # -- legacy counter attributes: read-through registry views (§12) -------
+    @property
+    def ticks(self) -> int:
+        """Total engine steps (prefill + decode)."""
+        return self._c_ticks.value
+
+    @property
+    def prefill_steps(self) -> int:
+        return self._c_prefill_steps.value
+
+    @property
+    def decode_steps(self) -> int:
+        return self._c_decode_steps.value
+
+    @property
+    def prompt_tokens(self) -> int:
+        """Prompt tokens absorbed via chunked prefill."""
+        return self._c_prompt_tokens.value
+
+    @property
+    def recompute_tokens(self) -> int:
+        """Generated tokens re-prefilled after a preemption."""
+        return self._c_recompute.value
+
+    @property
+    def tokens_generated(self) -> int:
+        return self._c_generated.value
+
+    @property
+    def preemptions(self) -> int:
+        return self._c_preemptions.value
+
+    @property
+    def prefix_hit_tokens(self) -> int:
+        """Prompt tokens skipped via prefix-cache hits."""
+        return self._c_hit_tokens.value
+
+    @property
+    def prefill_flops_skipped(self) -> int:
+        """Analytic FLOPs those hit tokens would have cost."""
+        return self._c_flops_skipped.value
+
+    @property
+    def peak_active_tokens(self) -> int:
+        """Max over ticks of sum(active lengths)."""
+        return self._g_peak_active.value
+
+    @property
+    def peak_kv_used_tokens(self) -> int:
+        """Max over ticks of resident KV tokens."""
+        return self._g_peak_kv.value
 
     def _prefix_hit(self, req: Request):
         """Longest indexed full-page prefix of the teacher-forced tokens,
@@ -389,12 +518,30 @@ class ServeEngine:
                 self.requests[s] = req
                 if req.admit_step is None:
                     req.admit_step = self.ticks
+                    req.admit_time = self._now
+                    if self.metrics.trace:
+                        self.metrics.name_track(PID_REQUESTS, req.rid,
+                                                f"req {req.rid}")
+                        self.metrics.begin(
+                            f"req {req.rid}", pid=PID_REQUESTS, tid=req.rid,
+                            step=self.ticks, prompt=len(req.prompt),
+                            max_new=req.max_new)
+                elif self.metrics.trace:
+                    self.metrics.instant(
+                        "resume", pid=PID_REQUESTS, tid=req.rid,
+                        step=self.ticks,
+                        recompute=len(req.prefill_toks) - len(req.prompt))
                 if hit_blocks:
                     self.pool.splice(s, hit_blocks)
                     req.prefix_hit += cursor
-                    self.prefix_hit_tokens += cursor
-                    self.prefill_flops_skipped += analytic_prefill_flops(
-                        self.cfg, 0, cursor)
+                    self._c_hit_tokens.inc(cursor)
+                    self._c_flops_skipped.inc(
+                        analytic_prefill_flops(self.cfg, 0, cursor))
+                    if self.metrics.trace:
+                        self.metrics.instant(
+                            "prefix_splice", pid=PID_REQUESTS, tid=req.rid,
+                            step=self.ticks, hit_tokens=cursor,
+                            blocks=len(hit_blocks))
                 req.registered_blocks = len(hit_blocks)
                 req.pos = cursor
                 self.lengths[s] = cursor
@@ -420,16 +567,45 @@ class ServeEngine:
         self.state = state
 
     def _finish_or_continue(self, s, tok):
-        """Record a sampled token for slot s; free the slot when done."""
+        """Record a sampled token for slot s; free the slot when done.
+
+        TTFT/TPOT are recorded here: TTFT in engine steps uses the bench
+        convention (first_token_step - admit_step + 1, admission ->
+        first sample inclusive); TPOT is the step gap between consecutive
+        samples of one request — honest about stalls, since the gap of the
+        first sample after a preemption spans the whole requeue + resume
+        period. The ms twins reuse the per-tick host timestamp (one
+        ``perf_counter`` per step, so values are quantized to tick starts
+        — no extra timestamps or device syncs on the token path)."""
         req = self.requests[s]
         if req.first_token_step is None:
             req.first_token_step = self.ticks
+            self._h_ttft_steps.record(req.first_token_step
+                                      - req.admit_step + 1)
+            if req.admit_time is not None:
+                self._h_ttft_ms.record((self._now - req.admit_time) * 1e3)
+            if self.metrics.trace:
+                self.metrics.instant("first_token", pid=PID_REQUESTS,
+                                     tid=req.rid, step=self.ticks)
+        else:
+            self._h_tpot_steps.record(self.ticks - req.last_token_step)
+            if req.last_token_time is not None:
+                self._h_tpot_ms.record(
+                    (self._now - req.last_token_time) * 1e3)
+        req.last_token_step = self.ticks
+        req.last_token_time = self._now
         req.out.append(tok)
         self.cur_tok[s] = tok
-        self.tokens_generated += 1
+        self._c_generated.inc()
         if len(req.out) >= req.max_new or self.lengths[s] >= self.max_len - 1:
             req.done = True
             self.requests[s] = None
+            self._c_finished.inc()
+            if self.metrics.trace:
+                self.metrics.end(f"req {req.rid}", pid=PID_REQUESTS,
+                                 tid=req.rid, step=self.ticks,
+                                 tokens=len(req.out),
+                                 preemptions=req.preemptions)
             if self.paged:
                 if self.prefix_cache:
                     # index any full pages completed this tick before the
@@ -453,8 +629,13 @@ class ServeEngine:
         req.prefill_toks = list(req.prompt) + list(req.out)
         req.pos = 0
         req.preemptions += 1
-        self.preemptions += 1
+        self._c_preemptions.inc()
+        if self.metrics.trace:
+            self.metrics.instant("preempt", pid=PID_REQUESTS, tid=req.rid,
+                                 step=self.ticks,
+                                 tokens=len(req.prefill_toks))
         self.queue.insert(0, req)  # resumes as soon as space frees up
+        self._g_queue.set(len(self.queue))
 
     def _pick_victim(self, exclude):
         """Youngest active request (latest admitted) other than ``exclude``."""
@@ -503,6 +684,10 @@ class ServeEngine:
             self._preempt(victim)
         src, dst = pair
         self.state = self._cow_copy(self.state, src, dst)
+        if self.metrics.trace:
+            self.metrics.instant("cow_copy", pid=PID_REQUESTS,
+                                 tid=self.requests[s].rid, step=self.ticks,
+                                 src=src, dst=dst)
 
     def _reserve(self, active):
         """Grow block tables to cover this tick's writes, oldest request
@@ -591,8 +776,9 @@ class ServeEngine:
         logits, self.state = self._prefill(*args)
         nxt = np.asarray(sample_tokens(self._sample_keys(), logits,
                                        temperature=self.temperature))
-        self.ticks += 1
-        self.prefill_steps += 1
+        self._c_ticks.inc()
+        self._c_prefill_steps.inc()
+        self._price_prefill(active, nv)
         for s in active:
             req = self.requests[s]
             take = int(nv[s])
@@ -603,8 +789,8 @@ class ServeEngine:
                                 - max(req.pos, n_prompt))
                 req.pos += take
                 req.prefill_kv_bytes += take * self.token_bytes
-                self.prompt_tokens += take - recompute
-                self.recompute_tokens += recompute
+                self._c_prompt_tokens.inc(take - recompute)
+                self._c_recompute.inc(recompute)
                 if req.pos < len(req.prefill_toks):
                     continue                    # still mid-prompt: no sample
             self._finish_or_continue(s, int(nxt[s]))
@@ -619,17 +805,18 @@ class ServeEngine:
         logits, self.state = self._decode(*args)
         nxt = np.asarray(sample_tokens(self._sample_keys(), logits,
                                        temperature=self.temperature))
-        self.ticks += 1
-        self.decode_steps += 1
+        self._c_ticks.inc()
+        self._c_decode_steps.inc()
+        self._price_decode(active)
         for s in active:
             req = self.requests[s]
             if self.lengths[s] < len(req.prefill_toks):
                 # the token written this tick was a prompt token (counted
                 # pre-increment so prompt[0] is included, matching prefill)
                 if self.lengths[s] < len(req.prompt):
-                    self.prompt_tokens += 1
+                    self._c_prompt_tokens.inc()
                 else:
-                    self.recompute_tokens += 1
+                    self._c_recompute.inc()
                 req.prefill_kv_bytes += self.token_bytes
             self.lengths[s] += 1
             req.pos = max(req.pos, int(self.lengths[s]))
@@ -639,17 +826,66 @@ class ServeEngine:
             else:
                 self._finish_or_continue(s, int(nxt[s]))
 
+    # -- executed-cost ledger (DESIGN.md §12) --------------------------------
+    def _price_prefill(self, active, nv):
+        """Ledger entry for one chunked-prefill step: each slot's chunk
+        priced at its actual (resident ctx, chunk) through the analytic
+        helpers, x attention layers. Called pre-length-increment, so
+        ``lengths[s]`` is the history the chunk attended over."""
+        ex = self._exec["prefill"]
+        g = self._geom
+        layout = "paged" if self.paged else "contiguous"
+        bytes_ = 0.0
+        flops = 0
+        kv = 0
+        for s in active:
+            chunk = int(nv[s])
+            ctx = int(self.lengths[s])
+            bytes_ += analytic_bytes_per_chunk_token(
+                layout, self.kv_dtype, ex["path"], Hkv=g["Hkv"], D=g["D"],
+                Dv=g["Dv"], ctx=ctx, chunk=chunk,
+                page_size=self.page_size or 1) * chunk
+            flops += analytic_attention_flops(
+                chunk, ctx + chunk, heads=g["heads"], d_qk=g["d_qk"],
+                d_v=g["d_v"])
+            kv += ctx + chunk
+        ex["calls"].inc(len(active))
+        ex["steps"].inc()
+        ex["tokens"].inc(kv)
+        ex["bytes"].inc(int(bytes_) * g["layers"])
+        ex["flops"].inc(flops * g["layers"])
+
+    def _price_decode(self, active):
+        """Ledger entry for one decode tick: every active slot reads its
+        resident history + the row written this tick."""
+        ex = self._exec["decode"]
+        g = self._geom
+        kv = 0
+        flops = 0
+        for s in active:
+            ctx = int(self.lengths[s]) + 1
+            kv += ctx
+            flops += analytic_attention_flops(
+                1, ctx, heads=g["heads"], d_qk=g["d_qk"], d_v=g["d_v"])
+        ex["calls"].inc(len(active))
+        ex["steps"].inc()
+        ex["tokens"].inc(kv)
+        ex["bytes"].inc(int(self._decode_bytes_per_ctx_token * kv)
+                        * g["layers"])
+        ex["flops"].inc(flops * g["layers"])
+
     def _track_memory(self, active):
-        self.peak_active_tokens = max(
-            self.peak_active_tokens,
+        self._g_peak_active.set_max(
             int(sum(self.lengths[s] for s in active)))
         used = (self.pool.used_blocks * self.page_size if self.paged
                 else self.slots * self.max_len)
-        self.peak_kv_used_tokens = max(self.peak_kv_used_tokens, used)
+        self._g_peak_kv.set_max(int(used))
 
     def tick(self):
         """Advance the engine by one step (prefill or decode)."""
+        self._now = time.perf_counter()
         self._admit()
+        self._g_queue.set(len(self.queue))
         active = [s for s in range(self.slots) if self.requests[s] is not None]
         if not active:
             return False
@@ -659,7 +895,13 @@ class ServeEngine:
             self.requests[s].pos < len(self.requests[s].prefill_toks)
             for s in active
         )
-        if prefilling:
+        if self.metrics.trace:
+            name = "prefill_step" if prefilling else "decode_step"
+            with self.metrics.span(name, step=self.ticks + 1,
+                                   active=len(active)):
+                (self._prefill_tick if prefilling
+                 else self._decode_tick)(active)
+        elif prefilling:
             self._prefill_tick(active)
         else:
             self._decode_tick(active)
@@ -674,6 +916,40 @@ class ServeEngine:
     def run(self):
         while self.tick() or self.queue:
             pass
+
+    # -- observability surfaces (DESIGN.md §12) ------------------------------
+    def attention_ledger(self) -> dict:
+        """Per-kind executed-cost rows: what the engine's steps were
+        *designed* to move and compute at their actual lengths — the live
+        fused-vs-gather byte ledger."""
+        return {
+            kind: {
+                "impl": ex["impl"],
+                "path": ex["path"],
+                "calls": ex["calls"].value,
+                "steps": ex["steps"].value,
+                "kv_tokens": ex["tokens"].value,
+                "analytic_bytes": ex["bytes"].value,
+                "analytic_flops": ex["flops"].value,
+            }
+            for kind, ex in self._exec.items()
+        }
+
+    def metrics_snapshot(self) -> dict:
+        """Everything observable about this engine as one JSON-able dict:
+        the registry dump (counters/gauges/histograms — the per-spec
+        ``attention_dispatch_*`` and ``attention_exec_*`` families
+        included), TTFT/TPOT percentile conveniences (engine steps — the
+        scheduling-level latency signal), the executed-cost attention
+        ledger, and ``memory_stats()``."""
+        snap = self.metrics.snapshot()
+        snap["ttft_steps_p50"] = self._h_ttft_steps.quantile(0.50)
+        snap["ttft_steps_p99"] = self._h_ttft_steps.quantile(0.99)
+        snap["tpot_steps_p50"] = self._h_tpot_steps.quantile(0.50)
+        snap["tpot_steps_p99"] = self._h_tpot_steps.quantile(0.99)
+        snap["attention"] = self.attention_ledger()
+        snap["memory"] = self.memory_stats()
+        return snap
 
     # -- memory accounting (BENCH_serve.json) -------------------------------
     def kv_reserved_tokens(self) -> int:

@@ -57,6 +57,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.serve.metrics import MetricsRegistry
+
 
 def blocks_for(n_tokens: int, page_size: int) -> int:
     """Blocks needed to hold ``n_tokens`` logical tokens."""
@@ -101,6 +103,13 @@ def kv_token_bytes(cfg, kv_dtype: str | None = None) -> int:
 class PoolStats:
     """Allocator statistics (exported into BENCH_serve.json).
 
+    Since DESIGN.md §12 this is a *view*: the metrics registry owns every
+    counter (single-ownership contract — the pool increments registry
+    instruments directly and ``BlockPool.stats`` materializes a PoolStats
+    from them on each access), so ``memory_stats()`` and
+    ``metrics_snapshot()`` can never disagree. Mutating a returned
+    instance changes nothing.
+
     The ``used_blocks`` / ``cached_blocks`` / ``free_blocks`` triple is a
     live residency snapshot (refreshed on every pool mutation) splitting
     the pool into referenced, retained-for-reuse, and free blocks — so
@@ -137,7 +146,8 @@ class BlockPool:
 
     def __init__(self, pool_blocks: int, page_size: int, slots: int,
                  max_blocks_per_seq: int, token_bytes: int = 0,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 metrics: MetricsRegistry | None = None):
         assert pool_blocks > 0 and page_size > 0
         self.pool_blocks = pool_blocks
         self.page_size = page_size
@@ -164,8 +174,45 @@ class BlockPool:
         self._children: dict = {}     # block id -> set of indexed child ids
         self._cached: dict = {}       # block id -> LRU tick (refcount == 0)
         self._tick = 0                # monotonic LRU clock
-        self.stats = PoolStats()
+        # observability (DESIGN.md §12): the registry is the single owner
+        # of the allocator counters; ``stats`` rebuilds the legacy
+        # PoolStats view from it on demand. The engine passes its own
+        # registry in so pool and engine share one metric namespace.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._c_allocs = m.counter("pool_allocs_total")
+        self._c_frees = m.counter("pool_frees_total")
+        self._c_evictions = m.counter("pool_evictions_total")
+        self._c_alloc_failures = m.counter("pool_alloc_failures_total")
+        self._c_lookups = m.counter("pool_cache_lookups_total")
+        self._c_hits = m.counter("pool_cache_hits_total")
+        self._c_hit_blocks = m.counter("pool_hit_blocks_total")
+        self._c_cached_evictions = m.counter("pool_cached_evictions_total")
+        self._c_cow = m.counter("pool_cow_copies_total")
+        self._g_used = m.gauge("pool_used_blocks")
+        self._g_cached = m.gauge("pool_cached_blocks")
+        self._g_free = m.gauge("pool_free_blocks")
+        self._g_peak_used = m.gauge("pool_peak_used_blocks")
         self._sync_residency()
+
+    @property
+    def stats(self) -> PoolStats:
+        """The legacy PoolStats surface, materialized from the registry."""
+        return PoolStats(
+            allocs=self._c_allocs.value,
+            frees=self._c_frees.value,
+            evictions=self._c_evictions.value,
+            alloc_failures=self._c_alloc_failures.value,
+            peak_used_blocks=self._g_peak_used.value,
+            used_blocks=self._g_used.value,
+            cached_blocks=self._g_cached.value,
+            free_blocks=self._g_free.value,
+            cache_lookups=self._c_lookups.value,
+            cache_hits=self._c_hits.value,
+            hit_blocks=self._c_hit_blocks.value,
+            cached_evictions=self._c_cached_evictions.value,
+            cow_copies=self._c_cow.value,
+        )
 
     # -- capacity queries ---------------------------------------------------
     @property
@@ -203,9 +250,9 @@ class BlockPool:
         return self.used_blocks / self.pool_blocks
 
     def _sync_residency(self):
-        self.stats.used_blocks = self.used_blocks
-        self.stats.cached_blocks = len(self._cached)
-        self.stats.free_blocks = len(self.free_blocks)
+        self._g_used.set(self.used_blocks)
+        self._g_cached.set(len(self._cached))
+        self._g_free.set(len(self.free_blocks))
 
     def _available(self) -> int:
         """Blocks obtainable without preempting anyone: free + cached."""
@@ -241,7 +288,7 @@ class BlockPool:
             self._tick += 1
         else:
             self.free_blocks.append(b)
-        self.stats.frees += 1
+        self._c_frees.inc()
         return 1
 
     def is_shared(self, b: int) -> bool:
@@ -298,7 +345,7 @@ class BlockPool:
         ``tokens`` — the radix-trie descent, one dict lookup per page.
         Matched blocks may be cached *or* live (shared with a running
         sequence); cached matches get their LRU refreshed."""
-        self.stats.cache_lookups += 1
+        self._c_lookups.inc()
         ps = self.page_size
         out = []
         parent = -1
@@ -310,7 +357,7 @@ class BlockPool:
             out.append(b)
             parent = b
         if out:
-            self.stats.cache_hits += 1
+            self._c_hits.inc()
             for b in out:
                 if b in self._cached:
                     self._cached[b] = self._tick
@@ -325,9 +372,8 @@ class BlockPool:
             self.tables[slot, i] = b
             self._incref(b)
         self.n_blocks[slot] = len(blocks)
-        self.stats.hit_blocks += len(blocks)
-        self.stats.peak_used_blocks = max(self.stats.peak_used_blocks,
-                                          self.used_blocks)
+        self._c_hit_blocks.inc(len(blocks))
+        self._g_peak_used.set_max(self.used_blocks)
         self._sync_residency()
 
     def _reclaim(self, k: int) -> int:
@@ -343,7 +389,7 @@ class BlockPool:
             del self._cached[victim]
             self._deindex(victim)
             self.free_blocks.append(victim)
-            self.stats.cached_evictions += 1
+            self._c_cached_evictions.inc()
         return len(self.free_blocks) - before
 
     # -- alloc / free -------------------------------------------------------
@@ -362,7 +408,7 @@ class BlockPool:
         if need <= 0:
             return True
         if need > self._available():
-            self.stats.alloc_failures += 1
+            self._c_alloc_failures.inc()
             return False
         if need > len(self.free_blocks):
             self._reclaim(need - len(self.free_blocks))
@@ -371,9 +417,8 @@ class BlockPool:
             self.tables[slot, i] = b
             self.refcount[b] = 1
         self.n_blocks[slot] = want
-        self.stats.allocs += need
-        self.stats.peak_used_blocks = max(self.stats.peak_used_blocks,
-                                          self.used_blocks)
+        self._c_allocs.inc(need)
+        self._g_peak_used.set_max(self.used_blocks)
         self._sync_residency()
         return True
 
@@ -390,15 +435,14 @@ class BlockPool:
         if not self.free_blocks:
             self._reclaim(1)
         if not self.free_blocks:
-            self.stats.alloc_failures += 1
+            self._c_alloc_failures.inc()
             return None
         dst = self.free_blocks.pop()
         self.tables[slot, idx] = dst
         self.refcount[dst] = 1
         self._decref(src)
-        self.stats.cow_copies += 1
-        self.stats.peak_used_blocks = max(self.stats.peak_used_blocks,
-                                          self.used_blocks)
+        self._c_cow.inc()
+        self._g_peak_used.set_max(self.used_blocks)
         self._sync_residency()
         return src, dst
 
@@ -417,5 +461,5 @@ class BlockPool:
     def evict_slot(self, slot: int) -> int:
         """free_slot + eviction accounting (the preemption path)."""
         n = self.free_slot(slot)
-        self.stats.evictions += 1
+        self._c_evictions.inc()
         return n
