@@ -27,6 +27,13 @@ target's win is VPU op count) at *mixed prompt lengths* and measures:
     steps and per-request prefill KV HBM bytes <= 25% of cold with
     bit-identical temp-0 streams (``prefix_cache_scenarios`` rows:
     ``ttft_steps_warm``, ``prefix_hit_tokens``, ``prefill_flops_skipped``)
+  * the fault matrix (DESIGN.md §13): every chaos injection point driven
+    against a fault-free baseline, asserting stream isolation and
+    leak-free pool accounting (``fault_scenarios[]`` rows), plus the
+    crash-consistency scenario — mid-flight snapshot/restore continues
+    temp-0 streams bit-identically and the restored cached tier yields
+    warm-after-restore TTFT <= 25% of cold (``snapshot_restore``; the
+    engine snapshot itself is left at ``--snapshot-out`` for CI upload)
 
 Token streams are asserted identical between the contiguous and paged runs
 of each (variant, kv_dtype), so the numbers always describe equivalent
@@ -45,6 +52,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import time
 
@@ -190,6 +198,175 @@ def bench_prefix_scenario(params, cfg0, kv_dtype, *, n_requests, prefix_len,
     return sc
 
 
+def bench_fault_scenarios(params, cfg0, *, n_requests, prompt_len, max_new,
+                          chunk, slots, page_size, pool_blocks):
+    """The chaos matrix (ISSUE-9, DESIGN.md §13) as BENCH_serve.json
+    ``fault_scenarios[]`` rows, with the acceptance asserts in-script so
+    the CI smoke sweep gates them on every push:
+
+      * delay-only injectors (pool_alloc / admission / preempt) leave
+        every temp-0 stream bit-identical to the fault-free baseline;
+      * corruption injectors (logits / kv_corrupt) quarantine exactly
+        their victim (``finish_reason="failed"``) while co-resident
+        streams stay bit-identical;
+      * after every run the pool accounting is leak-free
+        (used + cached + free == pool_blocks, refcounts rebuilt from
+        tables, zero dangling radix keys) and the drained engine pins
+        nothing.
+    """
+    from repro.serve.faults import ChaosInjector, install_fault_injector
+
+    cfg = cfg0.replace(attention_variant="expmul")
+    rng = np.random.default_rng(11)
+    prompts = [list(rng.integers(1, cfg.vocab_size, size=prompt_len))
+               for _ in range(n_requests)]
+    kw = {"slots": slots, "max_len": prompt_len + max_new + 1,
+          "chunk_size": chunk, "kv_layout": "paged",
+          "page_size": page_size, "pool_blocks": pool_blocks}
+
+    def serve(injector):
+        install_fault_injector(injector)
+        try:
+            eng = ServeEngine(params, cfg, **kw)
+            reqs = [eng.submit(p, max_new, rid=i)
+                    for i, p in enumerate(prompts)]
+            eng.run(max_steps=5000)
+        finally:
+            install_fault_injector(None)
+        eng.pool.check_consistency()
+        assert eng.pool.used_blocks == 0, "drained engine still pins blocks"
+        return eng, reqs
+
+    _, base = serve(None)
+    expect = {r.rid: list(r.out) for r in base}
+    victim_rid = n_requests // 2
+    rows = []
+    plans = [(p, ChaosInjector(at={p: [1, 3, 5]}))
+             for p in ("pool_alloc", "admission", "preempt")]
+    plans += [(p, ChaosInjector(at={p: [4]}, rids={p: {victim_rid}}))
+              for p in ("logits", "kv_corrupt")]
+    for point, inj in plans:
+        eng, reqs = serve(inj)
+        delay_only = point in ("pool_alloc", "admission", "preempt")
+        assert inj.fired(point) >= 1, f"{point} injector never fired"
+        for r in reqs:
+            if delay_only or r.rid != victim_rid:
+                assert r.finish_reason == "length", (
+                    f"{point} chaos spilled into request {r.rid}: "
+                    f"{r.finish_reason}")
+                assert list(r.out) == expect[r.rid], (
+                    f"{point} chaos changed request {r.rid}'s temp-0 "
+                    f"stream")
+        snap = eng.metrics_snapshot()
+        if delay_only:
+            assert snap["quarantined"] == 0
+        else:
+            victim = next(r for r in reqs if r.rid == victim_rid)
+            assert victim.finish_reason == "failed", (
+                f"{point} victim finished {victim.finish_reason!r}, "
+                f"expected quarantine")
+            assert snap["quarantined"] == 1
+        rows.append({
+            "scenario": point,
+            "injected": inj.fired(point),
+            "opportunities": inj.opportunities(point),
+            "quarantined": snap["quarantined"],
+            "finish_reasons": {k: v for k, v
+                               in snap["finish_reasons"].items() if v},
+            "surviving_streams_bit_identical": True,
+            "pool_consistent": True,
+            "preemptions": int(eng.preemptions),
+        })
+    return rows
+
+
+def bench_snapshot_restore(params, cfg0, *, n_requests, prefix_len,
+                           tail_len, max_new, chunk, slots, page_size,
+                           snapshot_path):
+    """Crash-consistent snapshot/restore (ISSUE-9, DESIGN.md §13) as the
+    BENCH_serve.json ``snapshot_restore`` section. In-script asserts —
+    CI-gated via --smoke:
+
+      * mid-flight temp-0 streams continue bit-identically in the
+        restored engine (the snapshotting engine keeps running as the
+        never-stopped oracle);
+      * the cached prefix tier survives the restart: serving the shared-
+        prefix workload against the *restored* cache yields mean warm
+        TTFT <= 25% of cold, with streams bit-identical to cold.
+
+    The snapshot file itself is left at ``snapshot_path`` (CI artifact).
+    """
+    from repro.serve.snapshot import restore_engine
+
+    cfg = cfg0.replace(attention_variant="expmul")
+    rng = np.random.default_rng(13)
+    prefix = list(rng.integers(1, cfg.vocab_size, size=prefix_len))
+    prompts = [prefix + list(rng.integers(1, cfg.vocab_size, size=tail_len))
+               for _ in range(n_requests)]
+    max_len = prefix_len + tail_len + max_new + 1
+    kw = {"slots": slots, "max_len": max_len, "chunk_size": chunk,
+          "kv_layout": "paged", "page_size": page_size}
+
+    # leg 1 — mid-flight continuation: snapshot after a few ticks, keep
+    # the original running as the oracle, restore and compare
+    eng = ServeEngine(params, cfg, **kw, prefix_cache=True)
+    reqs = [eng.submit(p, max_new, rid=i) for i, p in enumerate(prompts)]
+    for _ in range(4):
+        eng.tick()
+    mid_path = snapshot_path + ".midflight"
+    eng.save_snapshot(mid_path)
+    eng.run()
+    oracle = {r.rid: list(r.out) for r in reqs}
+    restored = restore_engine(mid_path, params, cfg)
+    carried = ([r for r in restored.requests if r is not None]
+               + list(restored.queue))
+    restored.run()
+    for r in carried:
+        assert list(r.out) == oracle[r.rid], (
+            f"request {r.rid} diverged across the snapshot boundary")
+    restored.pool.check_consistency()
+    os.remove(mid_path)
+
+    # leg 2 — restart survival of the cached tier: cold engine (no cache)
+    # vs requests served against a cache restored from disk
+    cold = ServeEngine(params, cfg, **kw, prefix_cache=False)
+    cold_reqs = [cold.submit(p, max_new, rid=i)
+                 for i, p in enumerate(prompts)]
+    cold.run()
+    seed_eng = ServeEngine(params, cfg, **kw, prefix_cache=True)
+    seed_eng.submit(prompts[0], max_new, rid=-1)  # fills the radix index
+    seed_eng.run()
+    meta = seed_eng.save_snapshot(snapshot_path)
+    warm_eng = restore_engine(snapshot_path, params, cfg)
+    assert warm_eng.pool.cached_block_count > 0, (
+        "restored engine carries no cached prefix tier")
+    warm_reqs = [warm_eng.submit(p, max_new) for p in prompts]
+    warm_eng.run()
+    warm_eng.pool.check_consistency()
+    assert [r.out for r in cold_reqs] == [r.out for r in warm_reqs], (
+        "warm-after-restore streams diverged from cold")
+    ttft_cold = float(np.mean(_ttft_steps(cold_reqs)))
+    ttft_warm = float(np.mean(_ttft_steps(warm_reqs)))
+    assert ttft_warm <= 0.25 * ttft_cold, (
+        f"warm-after-restore TTFT {ttft_warm:.1f} steps > 25% of cold "
+        f"{ttft_cold:.1f}: the cached tier did not survive the restart")
+    return {
+        "n_requests": n_requests,
+        "prefix_len": prefix_len,
+        "midflight_streams_bit_identical": True,
+        "warm_streams_bit_identical": True,
+        "ttft_steps_cold": ttft_cold,
+        "ttft_steps_warm_restored": ttft_warm,
+        "ttft_warm_restored_over_cold": ttft_warm / ttft_cold,
+        "cached_blocks_restored": int(warm_eng.pool.cached_block_count),
+        "prefix_hit_tokens_after_restore": int(
+            warm_eng.prefix_hit_tokens),
+        "snapshot_bytes": os.path.getsize(snapshot_path),
+        "snapshot_state_leaves": int(meta["n_leaves"]),
+        "snapshot_path": snapshot_path,
+    }
+
+
 def _percentile_cols(snap, suffix=""):
     """TTFT/TPOT percentile columns out of an engine metrics snapshot
     (engine steps — DESIGN.md §12), asserted present and finite so a
@@ -290,6 +467,11 @@ def main(argv=None):
                          "run here (load in ui.perfetto.dev)")
     ap.add_argument("--out", default=str(
         pathlib.Path(__file__).resolve().parent.parent / "BENCH_serve.json"))
+    ap.add_argument("--snapshot-out", default=str(
+        pathlib.Path(__file__).resolve().parent.parent
+        / "BENCH_serve_snapshot.npz"),
+        help="where the snapshot/restore scenario leaves its engine "
+             "snapshot (uploaded as a CI artifact)")
     args = ap.parse_args(argv)
     if args.smoke:
         args.slots, args.prompt_len, args.max_new = 2, 32, 8
@@ -410,6 +592,36 @@ def main(argv=None):
               f"({sc['prefill_kv_bytes_warm_over_cold']:.1%}), "
               f"{sc['prefix_hit_tokens']} tok skipped "
               f"({sc['prefill_flops_skipped']:.3g} FLOPs), streams == cold")
+
+    # fault scenarios (ISSUE-9, DESIGN.md §13): the chaos matrix with its
+    # isolation + leak-free-accounting asserts in-script, CI-gated via
+    # --smoke like the prefix-cache scenario above
+    results["fault_scenarios"] = bench_fault_scenarios(
+        params, cfg, n_requests=4 if args.smoke else 16,
+        prompt_len=args.prompt_len, max_new=args.max_new, chunk=args.chunk,
+        slots=args.slots, page_size=args.page_size, pool_blocks=None)
+    for row in results["fault_scenarios"]:
+        print(f"  fault/{row['scenario']:10s}: {row['injected']} injected "
+              f"over {row['opportunities']} opportunities, "
+              f"quarantined {row['quarantined']}, reasons "
+              f"{row['finish_reasons']}, surviving streams == baseline, "
+              f"pool consistent")
+
+    # snapshot/restore (ISSUE-9): mid-flight continuation bit-identity and
+    # the warm-after-restore TTFT <= 25% cold gate; the snapshot file is
+    # kept as a CI artifact
+    results["snapshot_restore"] = bench_snapshot_restore(
+        params, cfg, n_requests=4 if args.smoke else 16,
+        prefix_len=1024, tail_len=16, max_new=args.max_new,
+        chunk=args.chunk, slots=args.slots, page_size=args.page_size,
+        snapshot_path=args.snapshot_out)
+    sr = results["snapshot_restore"]
+    print(f"  snapshot-restore: TTFT {sr['ttft_steps_warm_restored']:.1f} "
+          f"warm-after-restore vs {sr['ttft_steps_cold']:.1f} cold steps "
+          f"({sr['ttft_warm_restored_over_cold']:.1%}), "
+          f"{sr['cached_blocks_restored']} cached blocks survived, "
+          f"mid-flight + warm streams bit-identical "
+          f"({sr['snapshot_bytes']} B snapshot at {sr['snapshot_path']})")
 
     def pick(variant, kv_dtype, kv_layout):
         # the fused (pallas) rerun shares this triple with its gather row:

@@ -8,7 +8,17 @@ requests' shared 32-token system prefix is deduplicated by the automatic
 prefix cache (DESIGN.md §11; disable with ``--no-prefix-cache``).
 
   PYTHONPATH=src python examples/serve_batch.py [--kv-dtype int8] \
-      [--attention-impl pallas] [--kv-layout paged [--no-prefix-cache]]
+      [--attention-impl pallas] [--kv-layout paged [--no-prefix-cache]] \
+      [--deadline-steps N] [--chaos "preempt=0.05,..."] \
+      [--snapshot-path P | --restore-path P]
+
+Fault tolerance (DESIGN.md §13): ``--chaos`` installs the deterministic
+injector for both variant runs (delay-only faults leave the temp-0
+streams bit-identical; logits/kv_corrupt quarantine their victim);
+``--snapshot-path`` saves the final engine — cached prefix tier included —
+and ``--restore-path`` starts from it and re-serves the same prompts, so
+the shared system prefix splices from the restored radix index instead of
+re-prefilling.
 """
 import argparse
 import time
@@ -27,14 +37,15 @@ from repro.serve.engine import (
 
 def run(variant, params, cfg0, prompts, *, kv_dtype="fp32", max_new=24,
         chunk=16, attention_impl=None, kv_layout="contiguous",
-        prefix_cache=None):
+        prefix_cache=None, deadline_steps=None):
     cfg = cfg0.replace(attention_variant=variant)
     eng = ServeEngine(params, cfg, slots=4, max_len=128, chunk_size=chunk,
                       kv_dtype=kv_dtype, attention_impl=attention_impl,
-                      kv_layout=kv_layout, prefix_cache=prefix_cache)
+                      kv_layout=kv_layout, prefix_cache=prefix_cache,
+                      deadline_steps=deadline_steps)
     reqs = [eng.submit(p, max_new, rid=i) for i, p in enumerate(prompts)]
     t0 = time.time()
-    eng.run()
+    eng.run(max_steps=2000)
     dt = time.time() - t0
     return reqs, eng.tokens_generated / dt, eng
 
@@ -57,10 +68,27 @@ def main():
                          "default auto — on for paged attention-only "
                          "configs). The demo prompts share a 32-token "
                          "system prefix, so warm admissions splice it")
+    ap.add_argument("--deadline-steps", type=int, default=0,
+                    help="per-request engine-step budget (0 = none); "
+                         "expired requests finish with "
+                         "finish_reason='deadline' (DESIGN.md §13)")
+    ap.add_argument("--chaos", default=None,
+                    help="deterministic fault injection: 'point=rate,...' "
+                         "over {pool_alloc, admission, preempt, logits, "
+                         "kv_corrupt}, each capped at 4 fires")
+    ap.add_argument("--snapshot-path", default=None,
+                    help="write a crash-consistent snapshot of the final "
+                         "engine here (cached prefix tier included)")
+    ap.add_argument("--restore-path", default=None,
+                    help="restore an engine from a snapshot and re-serve "
+                         "the demo prompts against its warm prefix tier")
     args = ap.parse_args()
     if args.prefix_cache and args.kv_layout != "paged":
         ap.error("--prefix-cache requires --kv-layout paged: the contiguous "
                  "layout has no shared physical blocks to dedupe")
+    if args.chaos:
+        from repro.serve.faults import ChaosInjector, install_fault_injector
+        install_fault_injector(ChaosInjector.from_spec(args.chaos))
 
     cfg = get_config("qwen2-0.5b", smoke=True, dtype="float32",
                      param_dtype="float32")
@@ -84,8 +112,13 @@ def main():
                              kv_dtype=args.kv_dtype,
                              attention_impl=args.attention_impl,
                              kv_layout=args.kv_layout,
-                             prefix_cache=args.prefix_cache)
+                             prefix_cache=args.prefix_cache,
+                             deadline_steps=args.deadline_steps or None)
         st = eng.memory_stats()
+        reasons = {k: v for k, v in
+                   eng.metrics_snapshot()["finish_reasons"].items() if v}
+        if set(reasons) != {"length"}:
+            print(f"  {variant:7s}: finish reasons {reasons}")
         if st.get("prefix_cache"):
             print(f"  {variant:7s}: prefix cache {st['cache_hits']}/"
                   f"{st['cache_lookups']} hits, {st['prefix_hit_tokens']} "
@@ -116,6 +149,33 @@ def main():
         print(f"  exact-match rate {args.kv_dtype} vs fp32 cache: {rate:.2%} "
               f"at {quant_bytes} B/token "
               f"(fp32: {kv_token_bytes(cfg, 'fp32')} B/token)")
+    if args.chaos:
+        from repro.serve.faults import (
+            current_fault_injector,
+            install_fault_injector,
+        )
+        inj = current_fault_injector()
+        fires = {p: inj.fired(p) for p in inj.POINTS if inj.fired(p)}
+        install_fault_injector(None)
+        print(f"  chaos: injected {fires}")
+        if eng.paged:
+            eng.pool.check_consistency()
+            print("  pool accounting consistent after chaos")
+    if args.snapshot_path:
+        meta = eng.save_snapshot(args.snapshot_path)
+        print(f"  wrote snapshot {args.snapshot_path} "
+              f"({meta['n_leaves']} state leaves)")
+    if args.restore_path:
+        from repro.serve.snapshot import restore_engine
+        eng2 = restore_engine(args.restore_path, params,
+                              cfg.replace(attention_variant="expmul"))
+        warm = [eng2.submit(p, 24) for p in prompts]
+        eng2.run(max_steps=2000)
+        st2 = eng2.memory_stats()
+        print(f"  restored {args.restore_path}: re-served "
+              f"{len(warm)} prompts, "
+              f"{st2.get('prefix_hit_tokens', 0)} prompt tokens spliced "
+              f"from the restored prefix tier")
 
 
 if __name__ == "__main__":

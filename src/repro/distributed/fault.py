@@ -1,108 +1,27 @@
-"""Fault tolerance: auto-resume supervisor + straggler watchdog.
+"""Train-side fault tolerance: auto-resume supervisor + straggler watchdog.
+
+Since ISSUE-9 the actual primitives live in ``repro.reliability`` — one
+shared module for the train supervisor/watchdog trio *and* the serving
+engine's deadline watchdog, so the repo carries a single fault-tolerance
+idiom. This module keeps the historical train-side names importable.
 
 ``TrainSupervisor`` wraps the train loop: periodic async checkpoints,
 failure detection (any exception or injected fault), and restart from the
-latest checkpoint — the single-process analogue of a multi-host restart
-controller (on a real cluster the same object runs per-host and the
-coordinator re-forms the mesh; the checkpoint/restore path is identical
-and elastic, see checkpoint/restore.py).
-
-``StragglerWatchdog`` tracks per-step wall times with an EWMA and flags
-steps slower than ``threshold`` x the moving mean — on real fleets this
-feeds the scheduler that evicts/replaces slow hosts; here it logs and
-counts, and its decisions are unit-tested.
+latest checkpoint. ``StragglerWatchdog`` flags steps slower than
+``threshold`` x the EWMA of past steps. ``FaultInjector`` raises at
+scheduled steps for restart drills.
 """
 from __future__ import annotations
 
-import logging
-import time
+from repro.reliability import (
+    DeadlineWatchdog,
+    FaultInjector,
+    RestartSupervisor,
+    StragglerWatchdog,
+)
 
-log = logging.getLogger("repro.fault")
+# historical name: the train loop's restart controller is the generic one
+TrainSupervisor = RestartSupervisor
 
-
-class StragglerWatchdog:
-    def __init__(self, *, alpha: float = 0.1, threshold: float = 2.0,
-                 warmup: int = 5):
-        self.alpha = alpha
-        self.threshold = threshold
-        self.warmup = warmup
-        self.ewma = None
-        self.n = 0
-        self.flagged = []
-
-    def observe(self, step: int, dt: float) -> bool:
-        """Returns True if this step is a straggler."""
-        self.n += 1
-        if self.ewma is None:
-            self.ewma = dt
-            return False
-        is_slow = self.n > self.warmup and dt > self.threshold * self.ewma
-        if is_slow:
-            self.flagged.append((step, dt, self.ewma))
-            log.warning("straggler: step %d took %.3fs (ewma %.3fs)", step, dt, self.ewma)
-        else:
-            # stragglers do not poison the baseline
-            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
-        return is_slow
-
-
-class FaultInjector:
-    """Deterministic failure injection for tests/drills."""
-
-    def __init__(self, fail_at_steps=()):
-        self.fail_at = set(fail_at_steps)
-        self.injected = []
-
-    def maybe_fail(self, step: int):
-        if step in self.fail_at:
-            self.fail_at.discard(step)
-            self.injected.append(step)
-            raise RuntimeError(f"injected fault at step {step}")
-
-
-class TrainSupervisor:
-    """Run a step function with checkpoint/restart semantics.
-
-    run(state, steps) executes `step_fn(state, step_idx) -> state, metrics`,
-    checkpointing every ``ckpt_every`` steps and restarting from the latest
-    checkpoint after a failure (up to ``max_restarts``).
-    """
-
-    def __init__(self, step_fn, checkpointer, restore_fn, *, ckpt_every: int = 50,
-                 max_restarts: int = 3, watchdog: StragglerWatchdog | None = None,
-                 fault_injector: FaultInjector | None = None):
-        self.step_fn = step_fn
-        self.checkpointer = checkpointer
-        self.restore_fn = restore_fn   # (step|None) -> (state, step)
-        self.ckpt_every = ckpt_every
-        self.max_restarts = max_restarts
-        self.watchdog = watchdog or StragglerWatchdog()
-        self.fault_injector = fault_injector
-        self.restarts = 0
-        self.history = []
-
-    def run(self, state, start_step: int, num_steps: int):
-        step = start_step
-        end = start_step + num_steps
-        while step < end:
-            try:
-                t0 = time.time()
-                if self.fault_injector is not None:
-                    self.fault_injector.maybe_fail(step)
-                state, metrics = self.step_fn(state, step)
-                dt = time.time() - t0
-                self.watchdog.observe(step, dt)
-                self.history.append((step, metrics))
-                step += 1
-                if step % self.ckpt_every == 0:
-                    self.checkpointer.save(state, step)
-            except Exception as e:  # noqa: BLE001 — restart controller
-                self.restarts += 1
-                log.error("step %d failed (%s); restart %d/%d",
-                          step, e, self.restarts, self.max_restarts)
-                if self.restarts > self.max_restarts:
-                    raise
-                self.checkpointer.wait()
-                state, step = self.restore_fn()
-        self.checkpointer.wait()
-        return state, step
+__all__ = ["DeadlineWatchdog", "FaultInjector", "RestartSupervisor",
+           "StragglerWatchdog", "TrainSupervisor"]

@@ -319,6 +319,48 @@ def copy_paged_block(state, cfg: ModelConfig, src, dst, *, page_size):
     return new_state
 
 
+def poison_paged_block(state, cfg: ModelConfig, block, *, page_size,
+                       value=None):
+    """Overwrite one physical KV page with non-finite garbage — the
+    ``kv_corrupt`` chaos injector's device half (DESIGN.md §13).
+
+    Float leaves (fp32 K/V pools, quantized scale pools, MLA latents) get
+    NaN; integer code pools get their most-negative code (the NaN scales
+    alone already make every dequantized row non-finite). Attention over a
+    poisoned page produces non-finite logits for exactly the sequences
+    whose block tables reference it, which is what the engine's NaN
+    quarantine sentinel detects and isolates. Recurrent-kind caches are
+    per-slot state, not paged, and are untouched.
+
+    ``value`` overrides the fill for every leaf kind — ``value=0`` is the
+    quarantine *scrub*: a poisoned page going back to the free list must
+    be zeroed first, because a future owner that has only part-written
+    the page still attends over all of it, and a masked NaN row survives
+    the softmax (weight 0 times NaN is NaN in p@V).
+    """
+    block = jnp.asarray(block, jnp.int32)
+
+    def poison_leaf(buf):
+        shape = (buf.shape[0], page_size) + buf.shape[2:]
+        if value is not None:
+            bad = jnp.full(shape, value, buf.dtype)
+        elif jnp.issubdtype(buf.dtype, jnp.floating):
+            bad = jnp.full(shape, jnp.nan, buf.dtype)
+        else:
+            bad = jnp.full(shape, jnp.iinfo(buf.dtype).min, buf.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(
+            buf, bad, block * page_size, axis=1)
+
+    caches = list(state["caches"])
+    for pos, kind in enumerate(_unit(cfg)):
+        if kind != "attn":
+            continue
+        caches[pos] = jax.tree.map(poison_leaf, caches[pos])
+    new_state = dict(state)
+    new_state["caches"] = tuple(caches)
+    return new_state
+
+
 def encode_for_decode(params, state, frontend_embeds, enc_lengths, cfg):
     """Run the encoder once and stash per-layer cross K/V (enc-dec serving)."""
     _, norm = make_norm(cfg.norm)

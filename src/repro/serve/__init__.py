@@ -1,4 +1,16 @@
-from repro.serve.engine import Request, ServeEngine, analytic_prefill_flops
+from repro.serve.engine import (
+    FINISH_REASONS,
+    NonFiniteLogitsError,
+    Request,
+    ServeEngine,
+    analytic_prefill_flops,
+)
+from repro.serve.faults import (
+    ChaosInjector,
+    current_fault_injector,
+    fault_point,
+    install_fault_injector,
+)
 from repro.serve.metrics import (
     Counter,
     Gauge,
@@ -8,8 +20,13 @@ from repro.serve.metrics import (
 )
 from repro.serve.paged import BlockPool, PoolStats, blocks_for
 from repro.serve.sampling import sample_token, sample_tokens
+from repro.serve.snapshot import restore_engine, save_snapshot
 
-__all__ = ["BlockPool", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+__all__ = ["BlockPool", "ChaosInjector", "Counter", "FINISH_REASONS",
+           "Gauge", "Histogram", "MetricsRegistry", "NonFiniteLogitsError",
            "PoolStats", "Request", "ServeEngine",
            "analytic_prefill_flops", "blocks_for",
-           "install_dispatch_counters", "sample_token", "sample_tokens"]
+           "current_fault_injector", "fault_point",
+           "install_dispatch_counters", "install_fault_injector",
+           "restore_engine", "sample_token", "sample_tokens",
+           "save_snapshot"]

@@ -76,6 +76,25 @@ in-kernel block tables, in-register dequant) — with zero registry
 fallbacks behind the knob. Non-obvious backend resolutions — declared
 fallbacks (none registered today) and the CPU interpret-mode caveat — are
 logged once at startup via ``registry.resolved_backends``.
+
+Fault tolerance (DESIGN.md §13): every request ends with a
+``finish_reason`` in {"length", "deadline", "cancelled", "failed",
+"preempt_limit"}, surfaced per-reason through ``metrics_snapshot()`` /
+``prometheus_text()``. Requests carry optional budgets — ``deadline_steps``
+(engine steps from first admission) and ``deadline_s`` (wall clock from
+submit) — enforced by a shared ``reliability.DeadlineWatchdog`` at the top
+of every tick; ``cancel(rid)`` unwinds a request at any lifecycle stage
+(queued, mid-prefill, mid-decode, or preempted) through the refcounted
+pool. A host-side sentinel checks each tick's logits (and sampled tokens)
+for non-finite values: ``nan_guard="quarantine"`` (default) fails only the
+offending request — its blocks are freed *and de-indexed from the radix
+cache* so a corrupted page can never be splice-reused — while co-resident
+temp-0 streams stay bit-identical to a fault-free run; ``"strict"`` raises
+``NonFiniteLogitsError`` instead. The deterministic chaos harness
+(``serve/faults.py``) drives these paths via seedable injection points;
+``serve/snapshot.py`` adds crash-consistent engine snapshot/restore
+(mid-flight streams continue bit-identically and the cached prefix tier
+survives restarts).
 """
 from __future__ import annotations
 
@@ -102,10 +121,13 @@ from repro.models.api import (
     decode_step_paged,
     init_decode_state,
     init_paged_state,
+    poison_paged_block,
     prefill,
     prefill_paged,
 )
 from repro.numerics.quant import KV_DTYPES
+from repro.reliability import DeadlineWatchdog
+from repro.serve.faults import fault_point
 from repro.serve.metrics import (
     MS_BUCKETS,
     PID_ENGINE,
@@ -197,6 +219,21 @@ def analytic_prefill_flops(cfg, start: int, end: int) -> int:
     return int(flops)
 
 
+# terminal request states (DESIGN.md §13): every finished request carries
+# exactly one, and metrics_snapshot()["finish_reasons"] counts each
+FINISH_REASONS = ("length", "deadline", "cancelled", "failed",
+                  "preempt_limit")
+
+# nan_guard modes: quarantine the offending request (default), raise on
+# first fault, or skip the sentinel entirely
+NAN_GUARDS = ("quarantine", "strict", "off")
+
+
+class NonFiniteLogitsError(RuntimeError):
+    """Raised by ``nan_guard="strict"`` when a tick produces non-finite
+    logits (or an out-of-range sampled token) for an active request."""
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -204,6 +241,10 @@ class Request:
     max_new: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    finish_reason: str | None = None  # one of FINISH_REASONS once done
+    deadline_steps: int | None = None  # engine-step budget from admission
+    deadline_s: float | None = None    # wall-clock budget from submit
+    submit_time: float | None = None   # host wall clock of submit()
     pos: int = 0            # prefill cursor into ``prefill_toks``
     first_token_step: int | None = None  # engine step that produced out[0]
     preemptions: int = 0    # times this request was evicted and requeued
@@ -230,8 +271,29 @@ class ServeEngine:
                  attention_impl: str | None = None,
                  prefix_cache: bool | None = None,
                  metrics: MetricsRegistry | None = None,
-                 trace: bool = False):
-        assert kv_layout in ("contiguous", "paged"), kv_layout
+                 trace: bool = False,
+                 nan_guard: str = "quarantine",
+                 deadline_steps: int | None = None,
+                 deadline_s: float | None = None,
+                 max_preemptions: int | None = None):
+        # loud argument validation (ISSUE-9 satellite): these used to be
+        # bare asserts, which vanish under ``python -O``
+        if kv_layout not in ("contiguous", "paged"):
+            raise ValueError(f"kv_layout must be 'contiguous' or 'paged', "
+                             f"got {kv_layout!r}")
+        if nan_guard not in NAN_GUARDS:
+            raise ValueError(f"nan_guard must be one of {NAN_GUARDS}, "
+                             f"got {nan_guard!r}")
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        if max_len < 2:
+            raise ValueError(f"max_len must be >= 2 (one prompt token plus "
+                             f"one generated), got {max_len}")
+        if int(chunk_size) < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        if max_preemptions is not None and max_preemptions < 0:
+            raise ValueError(
+                f"max_preemptions must be >= 0, got {max_preemptions}")
         # observability (DESIGN.md §12): the registry is the single owner
         # of every serving counter — memory_stats()/PoolStats are views.
         # ``trace`` gates span/event recording only; counters, histograms
@@ -251,7 +313,7 @@ class ServeEngine:
         self.cfg = cfg
         self.slots = slots
         self.max_len = max_len
-        self.chunk_size = max(1, int(chunk_size))
+        self.chunk_size = int(chunk_size)
         self.temperature = temperature
         # base sampling key: per-request keys are folded from it each tick
         # (see _sample_keys) so temp>0 streams are scheduling-invariant
@@ -332,6 +394,18 @@ class ServeEngine:
         self.requests: list[Request | None] = [None] * slots
         self.queue: list[Request] = []
         self._admit_seq = 0
+        # fault tolerance (DESIGN.md §13): per-request deadline budgets are
+        # enforced by the shared reliability watchdog at the top of every
+        # tick; the defaults below apply to submits that don't override
+        self.nan_guard = nan_guard
+        self.default_deadline_steps = deadline_steps
+        self.default_deadline_s = deadline_s
+        self.max_preemptions = max_preemptions
+        self.deadlines = DeadlineWatchdog()
+        self._rids: set = set()     # every rid ever submitted (dup check)
+        self._next_rid = 0          # auto-assigned rids are monotonic
+        self._poison = None         # lazily jitted kv_corrupt injector half
+        self._scrub = None          # lazily jitted quarantine page scrubber
         # lifecycle counters live in the metrics registry (single-owner
         # contract, §12); the legacy attribute names are properties below
         m = self.metrics
@@ -346,6 +420,14 @@ class ServeEngine:
         self._c_flops_skipped = m.counter("serve_prefill_flops_skipped_total")
         self._c_submitted = m.counter("serve_requests_submitted_total")
         self._c_finished = m.counter("serve_requests_finished_total")
+        # per-terminal-state counters (§13): pre-created so snapshots and
+        # the Prometheus exposition always carry every reason, zeros
+        # included
+        self._c_reason = {
+            reason: m.counter("serve_finish_reasons_total", reason=reason)
+            for reason in FINISH_REASONS
+        }
+        self._c_quarantined = m.counter("serve_requests_quarantined_total")
         self._g_peak_active = m.gauge("serve_peak_active_tokens")
         self._g_peak_kv = m.gauge("serve_peak_kv_used_tokens")
         self._g_queue = m.gauge("serve_queue_depth")
@@ -391,17 +473,139 @@ class ServeEngine:
             Hkv=g["Hkv"], D=g["D"], Dv=g["Dv"],
             page_size=self.page_size or 1)
         install_dispatch_counters(self.metrics)
+        # constructor record (DESIGN.md §13): serve/snapshot.py rebuilds an
+        # identically shaped engine from exactly these kwargs, so the
+        # restored pool geometry and compiled graphs match the snapshot
+        self._ctor = {
+            "slots": slots, "max_len": max_len,
+            "chunk_size": self.chunk_size, "temperature": temperature,
+            "seed": seed, "kv_layout": kv_layout,
+            "page_size": page_size, "pool_blocks": pool_blocks,
+            "kv_dtype": self.kv_dtype, "attention_impl": attention_impl,
+            "prefix_cache": self.prefix_cache, "nan_guard": nan_guard,
+            "deadline_steps": deadline_steps, "deadline_s": deadline_s,
+            "max_preemptions": max_preemptions,
+        }
 
     # -- request lifecycle --------------------------------------------------
-    def submit(self, prompt, max_new: int, rid: int | None = None) -> Request:
+    def submit(self, prompt, max_new: int, rid: int | None = None, *,
+               deadline_steps: int | None = None,
+               deadline_s: float | None = None) -> Request:
+        """Queue a request. Raises ``ValueError`` (never a stripped-out
+        assert) on an empty/oversized prompt, ``max_new < 1``, or a
+        duplicate ``rid``. ``deadline_steps`` bounds engine steps from
+        first admission, ``deadline_s`` wall-clock seconds from this call
+        (None falls back to the engine defaults); an expired request
+        finishes with ``finish_reason="deadline"`` and whatever tokens it
+        produced."""
         prompt = list(prompt)
-        assert 0 < len(prompt) <= self.max_len - 1, len(prompt)
-        req = Request(rid if rid is not None else len(self.queue), prompt,
-                      max_new, prefill_toks=list(prompt))
+        if not prompt:
+            raise ValueError("empty prompt: a request needs at least one "
+                             "token to produce logits")
+        if len(prompt) > self.max_len - 1:
+            raise ValueError(
+                f"prompt length {len(prompt)} exceeds max_len - 1 = "
+                f"{self.max_len - 1} (one position must remain for the "
+                f"first sampled token)")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        deadline_steps = (deadline_steps if deadline_steps is not None
+                          else self.default_deadline_steps)
+        deadline_s = (deadline_s if deadline_s is not None
+                      else self.default_deadline_s)
+        if deadline_steps is not None and deadline_steps < 1:
+            raise ValueError(
+                f"deadline_steps must be >= 1, got {deadline_steps}")
+        if deadline_s is not None and deadline_s < 0:
+            raise ValueError(f"deadline_s must be >= 0, got {deadline_s}")
+        if rid is None:
+            rid = self._next_rid
+        elif rid in self._rids:
+            raise ValueError(
+                f"duplicate rid {rid}: request ids must be unique per "
+                f"engine (auto-assignment never collides; explicit rids "
+                f"are the caller's responsibility)")
+        self._rids.add(rid)
+        self._next_rid = max(self._next_rid, rid + 1)
+        req = Request(rid, prompt, max_new, prefill_toks=list(prompt),
+                      deadline_steps=deadline_steps, deadline_s=deadline_s,
+                      submit_time=time.perf_counter())
+        if deadline_s is not None:
+            self.deadlines.arm(rid, wall_budget=deadline_s,
+                               wall_base=req.submit_time)
         self.queue.append(req)
         self._c_submitted.inc()
         self._g_queue.set(len(self.queue))
         return req
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request wherever it is in its lifecycle: still queued,
+        mid-prefill, mid-decode, or sitting requeued after a preemption.
+        An active slot is unwound through the refcounted pool (completed
+        full pages are still indexed first — their content is valid, so
+        the prefix tier keeps the work). Returns False when ``rid`` is not
+        live (unknown, or already finished)."""
+        return self._terminate(rid, "cancelled")
+
+    def _terminate(self, rid: int, reason: str) -> bool:
+        """Move a live request to a terminal state (cancel / deadline)."""
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                self.queue.pop(i)
+                self._g_queue.set(len(self.queue))
+                self._finalize_request(req, reason)
+                if self.metrics.trace and req.admit_step is not None:
+                    self.metrics.end(f"req {req.rid}", pid=PID_REQUESTS,
+                                     tid=req.rid, step=self.ticks,
+                                     tokens=len(req.out), reason=reason)
+                return True
+        for s in range(self.slots):
+            req = self.requests[s]
+            if req is not None and req.rid == rid:
+                self._release_slot(s, reason)
+                return True
+        return False
+
+    def _finalize_request(self, req: Request, reason: str):
+        """Terminal-state bookkeeping shared by every finish path."""
+        req.done = True
+        req.finish_reason = reason
+        self.deadlines.disarm(req.rid)
+        self._c_finished.inc()
+        self._c_reason[reason].inc()
+
+    def _release_slot(self, s: int, reason: str):
+        """Finish the request in slot ``s`` with ``reason`` and free the
+        slot. Valid terminal states register completed pages into the
+        prefix tier (their KV is correct — a cancelled or expired request
+        still did real work); a quarantine (``"failed"``) instead
+        de-indexes and frees every block so suspect content can never be
+        splice-reused (DESIGN.md §13)."""
+        req = self.requests[s]
+        self._finalize_request(req, reason)
+        self.requests[s] = None
+        if self.metrics.trace:
+            self.metrics.end(f"req {req.rid}", pid=PID_REQUESTS,
+                             tid=req.rid, step=self.ticks,
+                             tokens=len(req.out),
+                             preemptions=req.preemptions, reason=reason)
+        if self.paged:
+            if reason == "failed":
+                self._c_quarantined.inc()
+                self._scrub_slot(s)
+                self.pool.quarantine_slot(s)
+            else:
+                if self.prefix_cache:
+                    self._register_full_pages(s, req)
+                self.pool.free_slot(s)
+
+    def _expire_deadlines(self):
+        """Sweep the deadline watchdog (top of every tick): expired
+        requests finish with ``finish_reason="deadline"`` and their slots
+        free immediately, so a stuck or over-budget request can never pin
+        pool blocks or a batch slot indefinitely."""
+        for rid in self.deadlines.expired(self.ticks, self._now):
+            self._terminate(rid, "deadline")
 
     # -- legacy counter attributes: read-through registry views (§12) -------
     @property
@@ -487,6 +691,11 @@ class ServeEngine:
         for s in range(self.slots):
             if self.requests[s] is None and self.queue:
                 req = self.queue[0]
+                if fault_point("admission", rid=req.rid, slot=s):
+                    # dropped admission (chaos): the head stays queued and
+                    # is retried next tick — a delay-only fault, so temp-0
+                    # streams are unchanged (scheduling-invariant keys)
+                    break
                 hit_blocks, cursor = ([], 0)
                 if self.prefix_cache:
                     hit_blocks, cursor = self._prefix_hit(req)
@@ -519,6 +728,13 @@ class ServeEngine:
                 if req.admit_step is None:
                     req.admit_step = self.ticks
                     req.admit_time = self._now
+                    if req.deadline_steps is not None:
+                        # the step budget starts at first admission (queue
+                        # wait is covered by the wall-clock budget, which
+                        # was armed at submit)
+                        self.deadlines.arm(req.rid,
+                                           step_budget=req.deadline_steps,
+                                           step_base=self.ticks)
                     if self.metrics.trace:
                         self.metrics.name_track(PID_REQUESTS, req.rid,
                                                 f"req {req.rid}")
@@ -598,26 +814,22 @@ class ServeEngine:
         self.cur_tok[s] = tok
         self._c_generated.inc()
         if len(req.out) >= req.max_new or self.lengths[s] >= self.max_len - 1:
-            req.done = True
-            self.requests[s] = None
-            self._c_finished.inc()
-            if self.metrics.trace:
-                self.metrics.end(f"req {req.rid}", pid=PID_REQUESTS,
-                                 tid=req.rid, step=self.ticks,
-                                 tokens=len(req.out),
-                                 preemptions=req.preemptions)
-            if self.paged:
-                if self.prefix_cache:
-                    # index any full pages completed this tick before the
-                    # release: the freed blocks land in the cached tier and
-                    # a future identical prompt can splice them
-                    self._register_full_pages(s, req)
-                self.pool.free_slot(s)
+            self._release_slot(s, "length")
 
     # -- paged capacity management ------------------------------------------
     def _preempt(self, s):
-        """Evict slot s and requeue its request for recompute-resumption."""
+        """Evict slot s and requeue its request for recompute-resumption.
+
+        With ``max_preemptions`` set, a request that has already been
+        evicted that many times finishes with
+        ``finish_reason="preempt_limit"`` instead of thrashing the pool
+        forever — its blocks free all the same, so the caller's capacity
+        retry proceeds."""
         req = self.requests[s]
+        if (self.max_preemptions is not None
+                and req.preemptions >= self.max_preemptions):
+            self._release_slot(s, "preempt_limit")
+            return
         if self.prefix_cache:
             # index the victim's completed pages first: they land in the
             # cached tier, so unless the preemptor reclaims them too the
@@ -754,6 +966,81 @@ class ServeEngine:
             if self.requests[s] is not None:
                 self._register_full_pages(s, self.requests[s])
 
+    # -- fault paths (DESIGN.md §13) -----------------------------------------
+    def _corrupt_kv(self, s):
+        """kv_corrupt chaos: poison the last physical page holding slot
+        ``s``'s resident KV (non-finite floats / sentinel ints via
+        ``models.api.poison_paged_block``). The slot's very next attention
+        reads the page, and masked rows still propagate — a masked score
+        is -inf, softmax gives it weight 0, and 0·NaN = NaN in p@V — so
+        the corruption surfaces as non-finite logits for this slot on the
+        same tick, which is what the quarantine sentinel must catch."""
+        idx = max(0, (int(self.lengths[s]) - 1) // self.page_size)
+        block = int(self.pool.tables[s, idx])
+        if self._poison is None:
+            ps = self.page_size
+            self._poison = jax.jit(
+                lambda state, b: poison_paged_block(
+                    state, self.cfg, b, page_size=ps))
+        self.state = self._poison(self.state, jnp.int32(block))
+
+    def _scrub_slot(self, s):
+        """Zero the physical pages a quarantined slot solely owns before
+        they rejoin the free list. Stale *finite* garbage in a freed page
+        is harmless — masked rows get softmax weight 0 — but a NaN row
+        survives the mask (0·NaN = NaN in p@V), so a recirculated
+        poisoned page would corrupt its next owner's logits mid-page.
+        Shared pages (refcount > 1) are skipped: another live reference
+        holds valid content there and this slot never wrote them."""
+        if self._scrub is None:
+            ps = self.page_size
+            self._scrub = jax.jit(
+                lambda state, b: poison_paged_block(
+                    state, self.cfg, b, page_size=ps, value=0))
+        for i in range(int(self.pool.n_blocks[s])):
+            b = int(self.pool.tables[s, i])
+            if int(self.pool.refcount[b]) == 1:
+                self.state = self._scrub(self.state, jnp.int32(b))
+
+    def _chaos_logits(self, active, logits):
+        """logits chaos: overwrite an injected slot's logits row with NaN
+        before sampling (models a device-side numerical fault)."""
+        for s in active:
+            if fault_point("logits", slot=s, rid=self.requests[s].rid):
+                logits = jnp.asarray(logits).at[s].set(jnp.nan)
+        return logits
+
+    def _guard_nonfinite(self, active, logits, nxt):
+        """Host-side NaN/Inf sentinel (§13): one vectorized finiteness
+        reduction over the tick's logits plus a range check on the sampled
+        tokens — no extra device work beyond the per-tick host transfer
+        the engine already performs. Only *active* slots are judged: idle
+        slots run fully-masked rows whose logits are legitimately
+        non-finite. Faulted requests are quarantined (``"failed"``, blocks
+        freed and de-indexed) or, under ``nan_guard="strict"``, raise
+        ``NonFiniteLogitsError``. Returns the surviving active slots."""
+        if self.nan_guard == "off":
+            return active
+        finite = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
+        vocab = self.cfg.vocab_size
+        survivors = []
+        for s in active:
+            tok = int(nxt[s])
+            if bool(finite[s]) and 0 <= tok < vocab:
+                survivors.append(s)
+                continue
+            req = self.requests[s]
+            if self.nan_guard == "strict":
+                raise NonFiniteLogitsError(
+                    f"non-finite logits for request {req.rid} (slot {s}) "
+                    f"at engine step {self.ticks}")
+            logger.warning(
+                "quarantining request %d (slot %d): non-finite logits at "
+                "engine step %d after %d generated tokens", req.rid, s,
+                self.ticks, len(req.out))
+            self._release_slot(s, "failed")
+        return survivors
+
     def _prefill_tick(self, active):
         """One chunked step: prefilling slots absorb up to chunk_size prompt
         tokens; decode-ready slots ride along as 1-valid chunks."""
@@ -774,11 +1061,16 @@ class ServeEngine:
         if self.paged:
             args += (self._block_tables(),)
         logits, self.state = self._prefill(*args)
+        logits = self._chaos_logits(active, logits)
         nxt = np.asarray(sample_tokens(self._sample_keys(), logits,
                                        temperature=self.temperature))
         self._c_ticks.inc()
         self._c_prefill_steps.inc()
         self._price_prefill(active, nv)
+        # sentinel before bookkeeping: a quarantined slot contributes no
+        # length/token updates, so survivors see the same schedule a
+        # fault-free run would (minus the freed capacity)
+        active = self._guard_nonfinite(active, logits, nxt)
         for s in active:
             req = self.requests[s]
             take = int(nv[s])
@@ -803,11 +1095,13 @@ class ServeEngine:
         if self.paged:
             args += (self._block_tables(),)
         logits, self.state = self._decode(*args)
+        logits = self._chaos_logits(active, logits)
         nxt = np.asarray(sample_tokens(self._sample_keys(), logits,
                                        temperature=self.temperature))
         self._c_ticks.inc()
         self._c_decode_steps.inc()
         self._price_decode(active)
+        active = self._guard_nonfinite(active, logits, nxt)
         for s in active:
             req = self.requests[s]
             if self.lengths[s] < len(req.prefill_toks):
@@ -884,13 +1178,32 @@ class ServeEngine:
     def tick(self):
         """Advance the engine by one step (prefill or decode)."""
         self._now = time.perf_counter()
+        # deadline sweep first: an expired request must not be admitted,
+        # reserved for, or stepped this tick
+        self._expire_deadlines()
         self._admit()
         self._g_queue.set(len(self.queue))
         active = [s for s in range(self.slots) if self.requests[s] is not None]
         if not active:
             return False
         if self.paged:
+            # forced-preemption chaos (§13): preemption is stream-preserving
+            # by the §7 recompute argument, so an injected storm must leave
+            # every temp-0 token stream bit-identical — only slower
+            for s in active:
+                if (self.requests[s] is not None and fault_point(
+                        "preempt", slot=s, rid=self.requests[s].rid)):
+                    self._preempt(s)
+            active = [s for s in active if self.requests[s] is not None]
             active = self._reserve(active)
+            if not active:
+                return bool(self.queue)
+            # kv-corruption chaos after reservation, so the poisoned
+            # physical block id is the one this tick actually attends over
+            for s in active:
+                if fault_point("kv_corrupt", slot=s,
+                               rid=self.requests[s].rid):
+                    self._corrupt_kv(s)
         prefilling = self.chunk_size > 1 and any(
             self.requests[s].pos < len(self.requests[s].prefill_toks)
             for s in active
@@ -913,9 +1226,24 @@ class ServeEngine:
             [s for s in range(self.slots) if self.requests[s] is not None])
         return True
 
-    def run(self):
+    def run(self, max_steps: int | None = None):
+        """Tick until every request reaches a terminal state. ``max_steps``
+        bounds the drive loop (a chaos run with an unbounded admission-drop
+        rate could otherwise spin on an unadmittable queue forever); the
+        per-request safety net is ``deadline_steps``/``deadline_s``."""
+        steps = 0
         while self.tick() or self.queue:
-            pass
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+
+    def save_snapshot(self, path: str) -> dict:
+        """Crash-consistent snapshot of the whole engine (DESIGN.md §13):
+        device state, pool + radix index, live/queued requests, deadline
+        budgets, and metrics, written atomically. Call between ticks.
+        ``serve.snapshot.restore_engine(path, params, cfg)`` rebuilds."""
+        from repro.serve.snapshot import save_snapshot
+        return save_snapshot(self, path)
 
     # -- observability surfaces (DESIGN.md §12) ------------------------------
     def attention_ledger(self) -> dict:
@@ -949,6 +1277,11 @@ class ServeEngine:
         snap["tpot_steps_p99"] = self._h_tpot_steps.quantile(0.99)
         snap["attention"] = self.attention_ledger()
         snap["memory"] = self.memory_stats()
+        # terminal-state accounting (§13): every finished request counted
+        # under exactly one reason; quarantines called out separately
+        snap["finish_reasons"] = {
+            reason: c.value for reason, c in self._c_reason.items()}
+        snap["quarantined"] = self._c_quarantined.value
         return snap
 
     # -- memory accounting (BENCH_serve.json) -------------------------------

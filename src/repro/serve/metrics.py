@@ -303,6 +303,48 @@ class MetricsRegistry:
     def events(self) -> list:
         return self._events
 
+    # -- snapshot/restore (DESIGN.md §13) ------------------------------------
+    def dump_values(self) -> dict:
+        """JSON-able dump of every instrument's *values* (labels kept as
+        [key, value] pair lists) — the engine snapshot's metrics half, so
+        counters, TTFT/TPOT histograms, and Prometheus exposition survive
+        a crash-consistent restore. Trace events are deliberately not
+        serialized: a restored process has a fresh monotonic clock, so old
+        span timestamps would be meaningless."""
+        return {
+            "counters": [[name, [list(kv) for kv in labels], c.value]
+                         for (name, labels), c in self._counters.items()],
+            "gauges": [[name, [list(kv) for kv in labels], g.value]
+                       for (name, labels), g in self._gauges.items()],
+            "histograms": [
+                [name, [list(kv) for kv in labels],
+                 {"buckets": list(h.buckets), "counts": list(h.counts),
+                  "overflow": h.overflow, "count": h.count,
+                  "total": h.total}]
+                for (name, labels), h in self._histograms.items()],
+        }
+
+    def load_values(self, dump: dict) -> None:
+        """Restore instrument values from ``dump_values()`` output.
+        Instruments are created (or updated in place) through the normal
+        accessors, so references already held by an engine keep observing
+        the restored values."""
+        for name, labels, value in dump["counters"]:
+            self.counter(name, **dict(tuple(kv) for kv in labels)).value = \
+                value
+        for name, labels, value in dump["gauges"]:
+            self.gauge(name, **dict(tuple(kv) for kv in labels)).value = \
+                value
+        for name, labels, hv in dump["histograms"]:
+            h = self.histogram(name, buckets=tuple(hv["buckets"]),
+                               **dict(tuple(kv) for kv in labels))
+            if h.buckets != tuple(hv["buckets"]):
+                raise ValueError(f"histogram {name!r} bucket mismatch")
+            h.counts = list(hv["counts"])
+            h.overflow = hv["overflow"]
+            h.count = hv["count"]
+            h.total = hv["total"]
+
     # -- export --------------------------------------------------------------
     def snapshot(self) -> dict:
         """One JSON-able dict of everything the registry holds."""

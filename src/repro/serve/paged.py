@@ -57,6 +57,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.serve.faults import fault_point
 from repro.serve.metrics import MetricsRegistry
 
 
@@ -407,7 +408,11 @@ class BlockPool:
         need = want - have
         if need <= 0:
             return True
-        if need > self._available():
+        if need > self._available() or fault_point(
+                "pool_alloc", slot=slot, need=need):
+            # the chaos injector (DESIGN.md §13) forces a failure here to
+            # exercise the reclaim -> preemption ladder; the engine retries
+            # after evicting a victim, so each retry is a new opportunity
             self._c_alloc_failures.inc()
             return False
         if need > len(self.free_blocks):
@@ -463,3 +468,126 @@ class BlockPool:
         n = self.free_slot(slot)
         self._c_evictions.inc()
         return n
+
+    def quarantine_slot(self, slot: int) -> int:
+        """Release ``slot``'s blocks as *suspect* (NaN quarantine, §13).
+
+        Every block the slot references is de-indexed from the prefix
+        cache first — cascading through indexed descendants — so a page
+        that may hold corrupted KV can never be splice-reused by a future
+        prompt; only then is the reference dropped. A de-indexed block
+        whose last reference this was goes straight to the free list (its
+        *storage* is fine — only the content is suspect, and sentinel
+        semantics guarantee a freed block is rewritten before it is ever
+        read again). Blocks still referenced by another live slot stay
+        used but unindexed; if that slot's stream is itself corrupted the
+        sentinel quarantines it on its own tick. Returns the number of
+        blocks released by this slot."""
+        n = int(self.n_blocks[slot])
+        for i in range(n):
+            b = int(self.tables[slot, i])
+            self._deindex(b)
+            self._decref(b)
+        self.tables[slot, :n] = self.sentinel
+        self.n_blocks[slot] = 0
+        self._sync_residency()
+        return n
+
+    # -- invariants (chaos harness, DESIGN.md §13) ---------------------------
+    def check_consistency(self):
+        """Assert the pool's full accounting invariant set; raises
+        AssertionError with a specific message on any violation.
+
+        The chaos test matrix calls this after every injector run: no
+        amount of forced alloc failure, preemption storm, quarantine, or
+        admission drop may leak a block (used + cached + free ==
+        pool_blocks, with the tiers disjoint), skew a refcount away from
+        the tables that define it, or leave a dangling radix key (an index
+        entry whose block is on the free list, or whose parent chain is
+        broken)."""
+        refs = np.zeros((self.pool_blocks,), np.int64)
+        for s in range(self.slots):
+            n = int(self.n_blocks[s])
+            for i in range(n):
+                b = int(self.tables[s, i])
+                assert 0 <= b < self.pool_blocks, \
+                    f"slot {s} table[{i}] = {b} out of range"
+                refs[b] += 1
+            assert (self.tables[s, n:] == self.sentinel).all(), \
+                f"slot {s} has non-sentinel entries beyond n_blocks={n}"
+        assert (refs == self.refcount).all(), (
+            f"refcounts diverged from tables: "
+            f"{np.flatnonzero(refs != self.refcount).tolist()}")
+        free = set(self.free_blocks)
+        cached = set(self._cached)
+        used = {b for b in range(self.pool_blocks) if refs[b] > 0}
+        assert len(free) == len(self.free_blocks), "duplicate free blocks"
+        assert not (free & used), f"free∩used: {sorted(free & used)}"
+        assert not (free & cached), f"free∩cached: {sorted(free & cached)}"
+        assert not (cached & used), f"cached∩used: {sorted(cached & used)}"
+        assert len(used) + len(cached) + len(free) == self.pool_blocks, (
+            f"leak: used {len(used)} + cached {len(cached)} + free "
+            f"{len(free)} != pool {self.pool_blocks}")
+        # radix index integrity: bijective with _block_key, no entry naming
+        # a freed block, parent chains unbroken, child links symmetric
+        assert len(self._index) == len(self._block_key)
+        for key, b in self._index.items():
+            assert self._block_key.get(b) == key, f"index/block_key skew @{b}"
+            assert b not in free, f"dangling radix key: block {b} is free"
+            parent = key[0]
+            if parent >= 0:
+                assert parent in self._block_key, (
+                    f"block {b} indexed under unindexed parent {parent}")
+                assert b in self._children.get(parent, ()), (
+                    f"missing child link {parent}->{b}")
+        for parent, kids in self._children.items():
+            for b in kids:
+                assert self._block_key.get(b, (None,))[0] == parent, (
+                    f"stale child link {parent}->{b}")
+        for b in cached:
+            assert b in self._block_key, \
+                f"cached block {b} is not indexed (unreclaimable)"
+
+    # -- snapshot/restore (DESIGN.md §13) ------------------------------------
+    def dump_state(self) -> dict:
+        """JSON-able allocator state: tables, refcounts, free list, and the
+        full radix index (keys flattened to [parent, tokens..., block] rows
+        since JSON has no tuple keys). Counters are *not* included — the
+        engine snapshot serializes the whole metrics registry instead."""
+        return {
+            "pool_blocks": self.pool_blocks,
+            "page_size": self.page_size,
+            "tables": self.tables.tolist(),
+            "n_blocks": self.n_blocks.tolist(),
+            "refcount": self.refcount.tolist(),
+            "free_blocks": [int(b) for b in self.free_blocks],
+            "index": [[int(parent), [int(t) for t in tokens], int(b)]
+                      for (parent, tokens), b in self._index.items()],
+            "cached": [[int(b), int(t)] for b, t in self._cached.items()],
+            "tick": self._tick,
+        }
+
+    def load_state(self, dump: dict) -> None:
+        """Restore allocator state from ``dump_state()`` output into a pool
+        constructed with the same geometry."""
+        if (dump["pool_blocks"] != self.pool_blocks
+                or dump["page_size"] != self.page_size):
+            raise ValueError(
+                f"snapshot pool geometry ({dump['pool_blocks']} blocks x "
+                f"{dump['page_size']} tokens) does not match this pool "
+                f"({self.pool_blocks} x {self.page_size})")
+        self.tables = np.asarray(dump["tables"], np.int32)
+        self.n_blocks = np.asarray(dump["n_blocks"], np.int32)
+        self.refcount = np.asarray(dump["refcount"], np.int32)
+        self.free_blocks = [int(b) for b in dump["free_blocks"]]
+        self._index = {(int(p), tuple(int(t) for t in toks)): int(b)
+                       for p, toks, b in dump["index"]}
+        self._block_key = {b: key for key, b in self._index.items()}
+        self._children = {}
+        for (parent, _), b in self._index.items():
+            if parent >= 0:
+                self._children.setdefault(parent, set()).add(b)
+        self._cached = {int(b): int(t) for b, t in dump["cached"]}
+        self._tick = int(dump["tick"])
+        self._sync_residency()
+        self.check_consistency()

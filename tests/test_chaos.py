@@ -1,0 +1,189 @@
+"""Deterministic chaos matrix (DESIGN.md §13): every injection point is
+driven against a fault-free baseline, asserting stream isolation (delay
+faults change nothing; corruption faults fail exactly their victim) and
+leak-free pool accounting (used + cached + free == pool_blocks, no
+dangling radix keys) after every run."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.api import init_model
+from repro.serve.engine import ServeEngine
+from repro.serve.faults import (
+    ChaosInjector,
+    current_fault_injector,
+    install_fault_injector,
+)
+
+
+def _setup():
+    cfg = get_config("qwen2-0.5b", smoke=True, dtype="float32",
+                     param_dtype="float32")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _prompts(n=4, seed=1):
+    rng = np.random.default_rng(seed)
+    return [list(map(int, rng.integers(1, 200, size=12))) for _ in range(n)]
+
+
+def _run(params, cfg, injector=None, **kw):
+    install_fault_injector(injector)
+    try:
+        eng = ServeEngine(params, cfg, slots=2, max_len=64, chunk_size=8,
+                          kv_layout="paged", page_size=4, pool_blocks=24,
+                          **kw)
+        reqs = [eng.submit(p, 8) for p in _prompts()]
+        eng.run(max_steps=500)
+    finally:
+        install_fault_injector(None)
+    # leak-free accounting after EVERY chaos run: refcounts rebuilt from
+    # tables, residency tiers disjoint and exhaustive, index<->key
+    # bijection, and no index entry naming a free block (dangling key)
+    eng.pool.check_consistency()
+    assert eng.pool.used_blocks == 0, "drained engine still pins blocks"
+    return eng, reqs
+
+
+@pytest.fixture(autouse=True)
+def _no_leftover_injector():
+    yield
+    install_fault_injector(None)
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    params, cfg = _setup()
+    eng, reqs = _run(params, cfg)
+    return params, cfg, {r.rid: list(r.out) for r in reqs}
+
+
+# -- delay-only faults: every stream bit-identical ---------------------------
+
+@pytest.mark.parametrize("point", ["pool_alloc", "admission", "preempt"])
+def test_delay_faults_leave_all_streams_bit_identical(point, baseline):
+    params, cfg, expect = baseline
+    inj = ChaosInjector(at={point: [1, 3, 5]})
+    eng, reqs = _run(params, cfg, inj)
+    assert inj.fired(point) == 3
+    for r in reqs:
+        assert r.finish_reason == "length"
+        assert list(r.out) == expect[r.rid], (
+            f"{point} chaos changed request {r.rid}'s temp-0 stream")
+    assert eng.metrics_snapshot()["quarantined"] == 0
+
+
+# -- corruption faults: exactly the victim quarantined -----------------------
+
+@pytest.mark.parametrize("point", ["logits", "kv_corrupt"])
+def test_corruption_faults_quarantine_only_the_victim(point, baseline):
+    params, cfg, expect = baseline
+    inj = ChaosInjector(at={point: [4]}, rids={point: {2}})
+    eng, reqs = _run(params, cfg, inj)
+    assert inj.fired(point) == 1
+    victim = next(r for r in reqs if r.rid == 2)
+    assert victim.finish_reason == "failed"
+    for r in reqs:
+        if r.rid == 2:
+            continue
+        assert r.finish_reason == "length"
+        assert list(r.out) == expect[r.rid], (
+            f"{point} chaos leaked into co-resident request {r.rid}")
+    snap = eng.metrics_snapshot()
+    assert snap["quarantined"] == 1
+    assert snap["finish_reasons"]["failed"] == 1
+
+
+def test_quarantined_pages_never_splice_reused(baseline):
+    """After a kv_corrupt quarantine, resubmitting the victim's prompt
+    must miss the prefix cache for the de-indexed pages — the corrupted
+    content can never come back via a splice — and the fresh run must
+    produce the fault-free stream."""
+    params, cfg, expect = baseline
+    inj = ChaosInjector(at={"kv_corrupt": [4]}, rids={"kv_corrupt": {2}})
+    install_fault_injector(inj)
+    eng = ServeEngine(params, cfg, slots=2, max_len=64, chunk_size=8,
+                      kv_layout="paged", page_size=4, pool_blocks=24)
+    reqs = [eng.submit(p, 8) for p in _prompts()]
+    eng.run(max_steps=500)
+    install_fault_injector(None)
+    victim = next(r for r in reqs if r.rid == 2)
+    assert victim.finish_reason == "failed"
+    eng.pool.check_consistency()
+    retry = eng.submit(list(victim.prompt), 8)
+    eng.run(max_steps=500)
+    assert retry.finish_reason == "length"
+    assert list(retry.out) == expect[2], "retry after quarantine diverged"
+    eng.pool.check_consistency()
+
+
+# -- bounded storm across every point ----------------------------------------
+
+def test_bounded_multi_point_storm_terminates_cleanly():
+    params, cfg = _setup()
+    inj = ChaosInjector(
+        seed=7,
+        rates={p: 0.1 for p in ChaosInjector.POINTS},
+        limit={p: 2 for p in ChaosInjector.POINTS},
+    )
+    eng, reqs = _run(params, cfg, inj, max_preemptions=4)
+    assert all(r.done for r in reqs)
+    assert all(r.finish_reason is not None for r in reqs)
+    total = sum(inj.fired(p) for p in ChaosInjector.POINTS)
+    assert total <= 2 * len(ChaosInjector.POINTS)
+
+
+# -- injector unit semantics -------------------------------------------------
+
+def test_injector_is_deterministic_per_seed():
+    def drive(seed):
+        inj = ChaosInjector(seed=seed, rates={"preempt": 0.5})
+        return [inj.fire("preempt", slot=0) for _ in range(50)]
+
+    assert drive(3) == drive(3)
+    assert drive(3) != drive(4)
+
+
+def test_injector_limit_caps_fires():
+    inj = ChaosInjector(rates={"logits": 1.0}, limit={"logits": 2})
+    fires = [inj.fire("logits", slot=0) for _ in range(10)]
+    assert sum(fires) == 2 and fires[:2] == [True, True]
+    assert inj.opportunities("logits") == 10
+
+
+def test_injector_rid_filter_gates_opportunity_counting():
+    inj = ChaosInjector(at={"logits": [0]}, rids={"logits": {3}})
+    # rid-filtered calls are skipped and NOT counted as opportunities
+    assert inj.fire("logits", rid=1) is False
+    assert inj.fire("logits", rid=2) is False
+    assert inj.opportunities("logits") == 0
+    # "the first time rid 3 is eligible"
+    assert inj.fire("logits", rid=3) is True
+    assert inj.fire("logits", rid=3) is False
+
+
+def test_injector_rejects_unknown_points():
+    with pytest.raises(ValueError, match="unknown fault point"):
+        ChaosInjector(rates={"gamma_rays": 1.0})
+    inj = ChaosInjector()
+    with pytest.raises(ValueError, match="unknown fault point"):
+        inj.fire("gamma_rays")
+
+
+def test_from_spec_parses_cli_strings():
+    inj = ChaosInjector.from_spec("preempt=0.05, logits=0.01", limit_each=3)
+    assert inj.rates == {"preempt": 0.05, "logits": 0.01}
+    assert inj.limit == {"preempt": 3, "logits": 3}
+    with pytest.raises(ValueError, match="point=rate"):
+        ChaosInjector.from_spec("preempt")
+
+
+def test_install_is_last_wins_and_none_uninstalls():
+    a, b = ChaosInjector(), ChaosInjector()
+    install_fault_injector(a)
+    install_fault_injector(b)
+    assert current_fault_injector() is b
+    install_fault_injector(None)
+    assert current_fault_injector() is None

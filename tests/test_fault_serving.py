@@ -1,0 +1,308 @@
+"""Fault-tolerant serving (DESIGN.md §13): loud argument validation,
+deadlines, cancellation at every lifecycle stage, NaN quarantine modes,
+preemption limits, and the shared reliability primitives."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.api import init_model
+from repro.reliability import (
+    DeadlineWatchdog,
+    RestartSupervisor,
+    StragglerWatchdog,
+)
+from repro.serve.engine import (
+    FINISH_REASONS,
+    NonFiniteLogitsError,
+    ServeEngine,
+)
+from repro.serve.faults import ChaosInjector, install_fault_injector
+
+
+def _setup():
+    cfg = get_config("qwen2-0.5b", smoke=True, dtype="float32",
+                     param_dtype="float32")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _prompts(n, length=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return [list(map(int, rng.integers(1, 200, size=length)))
+            for _ in range(n)]
+
+
+@pytest.fixture(autouse=True)
+def _no_leftover_injector():
+    yield
+    install_fault_injector(None)
+
+
+# -- loud validation (the ex-assert satellite) -------------------------------
+
+def test_submit_validation_raises_value_error():
+    params, cfg = _setup()
+    eng = ServeEngine(params, cfg, slots=2, max_len=32)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([], 4)
+    with pytest.raises(ValueError, match="max_len - 1"):
+        eng.submit(list(range(1, 33)), 4)
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit([1, 2, 3], 0)
+    with pytest.raises(ValueError, match="deadline_steps"):
+        eng.submit([1, 2, 3], 4, deadline_steps=0)
+    with pytest.raises(ValueError, match="deadline_s"):
+        eng.submit([1, 2, 3], 4, deadline_s=-1.0)
+
+
+def test_duplicate_rid_rejected_and_auto_rids_never_collide():
+    params, cfg = _setup()
+    eng = ServeEngine(params, cfg, slots=2, max_len=32)
+    eng.submit([1, 2], 1, rid=7)
+    with pytest.raises(ValueError, match="duplicate rid 7"):
+        eng.submit([3, 4], 1, rid=7)
+    # auto-assignment skips past every explicit rid ever seen
+    auto = eng.submit([5, 6], 1)
+    assert auto.rid == 8
+    eng.run()
+    # rids stay burned after the requests finish
+    with pytest.raises(ValueError, match="duplicate rid 8"):
+        eng.submit([1, 2], 1, rid=8)
+
+
+def test_engine_constructor_validation():
+    params, cfg = _setup()
+    for kwargs, match in [
+        (dict(kv_layout="sparse"), "kv_layout"),
+        (dict(nan_guard="maybe"), "nan_guard"),
+        (dict(slots=0), "slots"),
+        (dict(max_len=1), "max_len"),
+        (dict(chunk_size=0), "chunk_size"),
+        (dict(max_preemptions=-1), "max_preemptions"),
+    ]:
+        with pytest.raises(ValueError, match=match):
+            ServeEngine(params, cfg, **kwargs)
+
+
+# -- finish reasons ----------------------------------------------------------
+
+def test_every_request_gets_a_finish_reason():
+    params, cfg = _setup()
+    eng = ServeEngine(params, cfg, slots=2, max_len=64, chunk_size=8,
+                      kv_layout="paged", page_size=4)
+    reqs = [eng.submit(p, 6) for p in _prompts(3)]
+    eng.run()
+    assert all(r.finish_reason == "length" for r in reqs)
+    snap = eng.metrics_snapshot()
+    assert set(snap["finish_reasons"]) == set(FINISH_REASONS)
+    assert snap["finish_reasons"]["length"] == 3
+    assert snap["quarantined"] == 0
+
+
+# -- deadlines ---------------------------------------------------------------
+
+def test_deadline_steps_expires_with_partial_output():
+    params, cfg = _setup()
+    eng = ServeEngine(params, cfg, slots=1, max_len=64, chunk_size=8,
+                      kv_layout="paged", page_size=4)
+    slow = eng.submit(_prompts(1)[0], 40, deadline_steps=4)
+    fast = eng.submit(_prompts(1, seed=1)[0], 3)
+    eng.run()
+    assert slow.finish_reason == "deadline"
+    assert 0 < len(slow.out) < 40  # kept what it produced in budget
+    assert fast.finish_reason == "length" and len(fast.out) == 3
+    # no leak: everything freed once the run drains
+    eng.pool.check_consistency()
+    assert eng.pool.used_blocks == 0
+    assert len(eng.deadlines) == 0
+
+
+def test_wall_clock_deadline_expires_queued_request():
+    params, cfg = _setup()
+    eng = ServeEngine(params, cfg, slots=1, max_len=64, chunk_size=8)
+    running = eng.submit(_prompts(1)[0], 8)
+    # the queued request's wall budget starts at submit, so it can expire
+    # without ever being admitted
+    queued = eng.submit(_prompts(1, seed=2)[0], 8, deadline_s=1e-4)
+    time.sleep(0.01)
+    eng.run()
+    assert running.finish_reason == "length"
+    assert queued.finish_reason == "deadline"
+    assert queued.out == [] and queued.admit_step is None
+
+
+def test_engine_default_deadline_applies_to_all_submits():
+    params, cfg = _setup()
+    eng = ServeEngine(params, cfg, slots=2, max_len=64, chunk_size=8,
+                      deadline_steps=3)
+    reqs = [eng.submit(p, 50) for p in _prompts(2)]
+    eng.run()
+    assert all(r.finish_reason == "deadline" for r in reqs)
+
+
+# -- cancellation ------------------------------------------------------------
+
+def _paged_engine(params, cfg, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("chunk_size", 8)
+    kw.setdefault("kv_layout", "paged")
+    kw.setdefault("page_size", 4)
+    return ServeEngine(params, cfg, **kw)
+
+
+def test_cancel_queued_and_unknown():
+    params, cfg = _setup()
+    eng = _paged_engine(params, cfg, slots=1)
+    a = eng.submit(_prompts(1)[0], 4)
+    b = eng.submit(_prompts(1, seed=1)[0], 4)
+    assert eng.cancel(b.rid) is True      # still queued: plain dequeue
+    assert b.finish_reason == "cancelled" and b.done
+    assert eng.cancel(12345) is False     # unknown rid
+    eng.run()
+    assert eng.cancel(a.rid) is False     # already finished
+    assert a.finish_reason == "length"
+
+
+@pytest.mark.parametrize("stage", ["mid_prefill", "mid_decode"])
+def test_cancel_active_slot_survivors_bit_identical(stage):
+    """Cancelling an in-slot request mid-prefill or mid-decode must not
+    perturb co-resident temp-0 streams, and must not leak pool blocks or
+    leave dangling radix keys — under prefix caching and a tight pool."""
+    params, cfg = _setup()
+    prompts = _prompts(3, length=14)
+
+    base = _paged_engine(params, cfg, pool_blocks=24)
+    base_reqs = [base.submit(p, 8) for p in prompts]
+    base.run()
+    baseline = {r.rid: list(r.out) for r in base_reqs}
+
+    eng = _paged_engine(params, cfg, pool_blocks=24)
+    reqs = [eng.submit(p, 8) for p in prompts]
+    victim = reqs[0]
+    # tick until the victim is in the requested lifecycle stage
+    for _ in range(200):
+        in_slot = any(r is victim for r in eng.requests)
+        if stage == "mid_prefill":
+            if in_slot and 0 < victim.pos < len(victim.prefill_toks):
+                break
+        else:
+            if in_slot and len(victim.out) >= 2:
+                break
+        eng.tick()
+    else:
+        pytest.fail(f"never reached {stage}")
+    assert eng.cancel(victim.rid) is True
+    assert victim.finish_reason == "cancelled"
+    eng.run()
+    eng.pool.check_consistency()
+    assert eng.pool.used_blocks == 0
+    for r in reqs[1:]:
+        assert list(r.out) == baseline[r.rid], "survivor stream changed"
+    if stage == "mid_decode":
+        # the cancelled stream matches the baseline prefix: valid work kept
+        assert baseline[victim.rid][:len(victim.out)] == list(victim.out)
+
+
+def test_cancel_while_preempted():
+    """Cancel a request sitting requeued after an eviction: it must leave
+    the queue, stay terminal, and never come back when capacity frees."""
+    params, cfg = _setup()
+    install_fault_injector(ChaosInjector(at={"preempt": [0]}))
+    eng = _paged_engine(params, cfg, pool_blocks=24)
+    reqs = [eng.submit(p, 8) for p in _prompts(3, length=14)]
+    victim = None
+    for _ in range(200):
+        eng.tick()
+        preempted = [r for r in eng.queue if r.preemptions > 0]
+        if preempted:
+            victim = preempted[0]
+            break
+    assert victim is not None, "forced preemption never landed"
+    install_fault_injector(None)
+    assert eng.cancel(victim.rid) is True
+    assert victim.finish_reason == "cancelled"
+    eng.run()
+    assert victim not in eng.queue and all(r is not victim
+                                           for r in eng.requests)
+    for r in reqs:
+        if r is not victim:
+            assert r.finish_reason == "length"
+    eng.pool.check_consistency()
+    assert eng.pool.used_blocks == 0
+
+
+# -- preemption limit --------------------------------------------------------
+
+def test_preempt_limit_finishes_instead_of_thrashing():
+    params, cfg = _setup()
+    install_fault_injector(ChaosInjector(at={"preempt": [0, 1]}))
+    eng = _paged_engine(params, cfg, max_preemptions=0)
+    reqs = [eng.submit(p, 6) for p in _prompts(2)]
+    eng.run(max_steps=300)
+    install_fault_injector(None)
+    reasons = sorted(r.finish_reason for r in reqs)
+    assert "preempt_limit" in reasons
+    assert all(r.done for r in reqs)
+    eng.pool.check_consistency()
+    assert eng.pool.used_blocks == 0
+
+
+# -- NaN guard modes ---------------------------------------------------------
+
+def test_strict_mode_raises_on_injected_nan():
+    params, cfg = _setup()
+    install_fault_injector(ChaosInjector(at={"logits": [2]}))
+    eng = _paged_engine(params, cfg, nan_guard="strict")
+    for p in _prompts(2):
+        eng.submit(p, 6)
+    with pytest.raises(NonFiniteLogitsError, match="non-finite logits"):
+        eng.run(max_steps=300)
+
+
+def test_nan_guard_off_skips_the_sentinel():
+    params, cfg = _setup()
+    install_fault_injector(ChaosInjector(at={"logits": [2]}))
+    eng = _paged_engine(params, cfg, nan_guard="off")
+    reqs = [eng.submit(p, 6) for p in _prompts(2)]
+    eng.run(max_steps=300)
+    # no quarantine happened; the faulted stream just carried garbage
+    assert eng.metrics_snapshot()["quarantined"] == 0
+    assert all(r.finish_reason == "length" for r in reqs)
+
+
+# -- shared reliability primitives (the unification satellite) ---------------
+
+def test_deadline_watchdog_step_and_wall_budgets():
+    dw = DeadlineWatchdog()
+    dw.arm("a", step_budget=5, step_base=10)
+    dw.arm("b", wall_budget=1.0, wall_base=100.0)
+    assert dw.expired(14, 100.5) == []
+    assert dw.expired(15, 100.5) == ["a"]          # step budget exhausted
+    assert sorted(dw.expired(15, 101.5)) == ["a", "b"]
+    dw.disarm("a")
+    assert dw.expired(99, 100.0) == []
+    assert dw.budgets("b") == (None, 1.0)
+    assert dw.budgets("missing") == (None, None)
+
+
+def test_deadline_watchdog_arm_merges_budgets():
+    dw = DeadlineWatchdog()
+    dw.arm("r", wall_budget=2.0, wall_base=50.0)   # at submit
+    dw.arm("r", step_budget=3, step_base=7)        # at first admission
+    assert dw.budgets("r") == (3, 2.0)
+    assert dw.expired(10, 51.0) == ["r"]
+
+
+def test_train_fault_names_are_reexported_shims():
+    from repro.distributed import fault
+
+    assert fault.TrainSupervisor is RestartSupervisor
+    assert fault.StragglerWatchdog is StragglerWatchdog
+    # the serve engine's watchdog is the same class train code gets
+    params, cfg = _setup()
+    eng = ServeEngine(params, cfg, slots=1, max_len=16)
+    assert isinstance(eng.deadlines, DeadlineWatchdog)

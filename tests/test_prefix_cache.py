@@ -178,7 +178,7 @@ def test_warm_streams_bit_identical_to_cold(variant, kv_dtype):
                           kv_layout="paged", page_size=4, kv_dtype=kv_dtype)
         assert eng.prefix_cache  # auto-on for paged attention-only configs
         if warm:
-            eng.submit(prompts[0][:43], 4)
+            eng.submit(prompts[0][:43], 4, rid=-1)  # seed the cache
             eng.run()
         reqs = [eng.submit(p, 6, rid=i) for i, p in enumerate(prompts)]
         eng.run()
@@ -333,7 +333,7 @@ def test_warm_streams_bit_identical_fused_pallas():
                           kv_layout="paged", page_size=8,
                           attention_impl="pallas")
         if warm:
-            eng.submit(shared + [3], 2)
+            eng.submit(shared + [3], 2, rid=-1)  # seed the cache
             eng.run()
         reqs = [eng.submit(p, 3, rid=i) for i, p in enumerate(prompts)]
         eng.run()

@@ -1,0 +1,193 @@
+"""Crash-consistent snapshot/restore (DESIGN.md §13): mid-flight temp-0
+(and temp>0) streams continue bit-identically in a restored engine, the
+cached prefix tier survives the restart, and architecture mismatches are
+rejected loudly."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.api import init_model
+from repro.serve.engine import ServeEngine
+from repro.serve.snapshot import restore_engine, save_snapshot
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_compile_cache():
+    # This module compiles fresh engine graphs late in the full suite;
+    # on jax 0.4.37 the CPU backend_compile can segfault once hundreds
+    # of executables have accumulated in-process. Dropping the caches
+    # here keeps the compile arena small (standalone runs are
+    # unaffected — everything below compiles from scratch anyway).
+    jax.clear_caches()
+
+
+def _setup(arch="qwen2-0.5b"):
+    cfg = get_config(arch, smoke=True, dtype="float32",
+                     param_dtype="float32")
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _prompts(n=3, seed=0, length=12):
+    rng = np.random.default_rng(seed)
+    return [list(map(int, rng.integers(1, 200, size=length)))
+            for _ in range(n)]
+
+
+def _engine(params, cfg, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("chunk_size", 8)
+    return ServeEngine(params, cfg, **kw)
+
+
+def _live_requests(eng):
+    return [r for r in eng.requests if r is not None] + list(eng.queue)
+
+
+PAGED = dict(kv_layout="paged", page_size=4, pool_blocks=32)
+
+
+@pytest.mark.parametrize("layout_kw", [PAGED, {}],
+                         ids=["paged", "contiguous"])
+def test_midflight_restore_is_bit_identical(tmp_path, layout_kw):
+    params, cfg = _setup()
+    prompts = _prompts()
+
+    oracle_eng = _engine(params, cfg, **layout_kw)
+    oracle = [oracle_eng.submit(p, 8) for p in prompts]
+    oracle_eng.run()
+    expect = {r.rid: list(r.out) for r in oracle}
+
+    eng = _engine(params, cfg, **layout_kw)
+    reqs = [eng.submit(p, 8) for p in prompts]
+    for _ in range(3):
+        eng.tick()
+    assert any(r.out for r in reqs), "snapshot point should be mid-flight"
+    path = str(tmp_path / "engine.npz")
+    meta = eng.save_snapshot(path)
+    assert meta["n_leaves"] > 0 and os.path.exists(path)
+    assert not [f for f in os.listdir(tmp_path) if ".tmp" in f], (
+        "atomic write must not leave tmp files")
+
+    restored = restore_engine(path, params, cfg)
+    carried = _live_requests(restored)
+    assert len(carried) == len([r for r in reqs if not r.done])
+    restored.run()
+    assert restored.ticks == eng.ticks + (oracle_eng.ticks - eng.ticks), (
+        "restored engine-step clock must continue, not restart")
+    for r in carried:
+        assert r.finish_reason == "length"
+        assert list(r.out) == expect[r.rid], (
+            f"request {r.rid} diverged across snapshot/restore")
+    if restored.paged:
+        restored.pool.check_consistency()
+        assert restored.pool.used_blocks == 0
+
+
+def test_restore_continues_temperature_sampling_streams(tmp_path):
+    """temp>0: sampling keys are (seed, admit_order, len(out)) — all
+    serialized — so stochastic streams also continue bit-identically."""
+    params, cfg = _setup()
+    prompts = _prompts(2)
+
+    oracle_eng = _engine(params, cfg, temperature=0.8, **PAGED)
+    oracle = [oracle_eng.submit(p, 8) for p in prompts]
+    oracle_eng.run()
+    expect = {r.rid: list(r.out) for r in oracle}
+
+    eng = _engine(params, cfg, temperature=0.8, **PAGED)
+    reqs = [eng.submit(p, 8) for p in prompts]
+    for _ in range(4):
+        eng.tick()
+    path = str(tmp_path / "warm.npz")
+    save_snapshot(eng, path)
+    restored = restore_engine(path, params, cfg)
+    carried = _live_requests(restored)
+    restored.run()
+    for r in carried:
+        assert list(r.out) == expect[r.rid]
+    assert all(expect[r.rid][:len(r.out)] == list(r.out) for r in reqs)
+
+
+def test_prefix_tier_survives_restart(tmp_path):
+    """The headline restart guarantee: pages cached by a finished request
+    splice for the same prompt in the *restored* engine — warm prefill
+    skips survive the crash."""
+    params, cfg = _setup()
+    prompt = _prompts(1, length=24)[0]
+
+    eng = _engine(params, cfg, **PAGED)
+    cold = eng.submit(prompt, 8)
+    eng.run()
+    assert cold.prefix_hit == 0
+    cold_prefill_steps = eng.prefill_steps
+    assert eng.pool.cached_block_count > 0, "no pages were cached"
+    path = str(tmp_path / "tier.npz")
+    eng.save_snapshot(path)
+
+    restored = restore_engine(path, params, cfg)
+    assert restored.pool.cached_block_count == eng.pool.cached_block_count
+    warm = restored.submit(prompt, 8)
+    restored.run()
+    assert warm.prefix_hit > 0, "restored radix index produced no splice"
+    assert list(warm.out) == list(cold.out), "warm stream diverged"
+    warm_prefill_steps = restored.prefill_steps - cold_prefill_steps
+    assert warm_prefill_steps < cold_prefill_steps, (
+        "warm prefill should need fewer chunked steps than cold")
+    restored.pool.check_consistency()
+
+
+def test_metrics_and_rid_allocator_continuity(tmp_path):
+    params, cfg = _setup()
+    eng = _engine(params, cfg, **PAGED)
+    r0 = eng.submit(_prompts(1)[0], 4, rid=11)
+    eng.run()
+    path = str(tmp_path / "m.npz")
+    eng.save_snapshot(path)
+
+    restored = restore_engine(path, params, cfg)
+    snap = restored.metrics_snapshot()
+    assert restored.ticks == eng.ticks
+    assert snap["finish_reasons"]["length"] == 1
+    assert restored.tokens_generated == eng.tokens_generated
+    # rid uniqueness survives the restart
+    with pytest.raises(ValueError, match="duplicate rid 11"):
+        restored.submit([1, 2, 3], 2, rid=11)
+    nxt = restored.submit([1, 2, 3], 2)
+    assert nxt.rid == 12
+    assert r0.rid == 11  # original handle untouched
+
+
+def test_restore_rejects_architecture_mismatch(tmp_path):
+    params, cfg = _setup()
+    eng = _engine(params, cfg, **PAGED)
+    eng.submit(_prompts(1)[0], 4)
+    eng.run()
+    path = str(tmp_path / "arch.npz")
+    eng.save_snapshot(path)
+
+    params2, cfg2 = _setup("qwen1.5-0.5b")
+    with pytest.raises(ValueError, match="was taken from config"):
+        restore_engine(path, params2, cfg2)
+
+
+def test_restored_deadlines_still_enforced(tmp_path):
+    params, cfg = _setup()
+    eng = _engine(params, cfg, slots=1, **PAGED)
+    slow = eng.submit(_prompts(1)[0], 50, deadline_steps=6)
+    for _ in range(2):
+        eng.tick()
+    path = str(tmp_path / "dl.npz")
+    eng.save_snapshot(path)
+
+    restored = restore_engine(path, params, cfg)
+    carried = _live_requests(restored)[0]
+    assert carried.rid == slow.rid
+    restored.run()
+    assert carried.finish_reason == "deadline"
+    assert len(carried.out) < 50
+    restored.pool.check_consistency()
